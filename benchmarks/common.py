@@ -1,0 +1,26 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print one CSV block: name,us_per_call,derived columns."""
+    if not rows:
+        print(f"{name},0,empty")
+        return
+    keys = sorted({k for r in rows for k in r})
+    print(f"# {name}: {','.join(keys)}")
+    for r in rows:
+        print(name + "," + ",".join(str(r.get(k, "")) for k in keys))
+
+
+class WallTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,57 @@
+"""Paper Fig 5: throughput T^px and speedup, Lambda vs Dask/HPC.
+
+Claims reproduced: Lambda throughput scales with partitions; Dask peaks at
+1–4 partitions then degrades; only compute-heavy configs show any Dask
+speedup at all.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.metrics import MetricRegistry
+from repro.core.miniapp import StreamExperiment, run_experiment
+
+PARTITIONS = [1, 2, 4, 8, 16]
+CENTROIDS = [1024, 8192]
+
+
+def run(n_messages: int = 40) -> list[dict]:
+    rows = []
+    for machine in ["serverless", "wrangler"]:
+        for c in CENTROIDS:
+            base = None
+            for n in PARTITIONS:
+                res = run_experiment(StreamExperiment(
+                    machine=machine, partitions=n, points=16000, centroids=c,
+                    n_messages=n_messages, seed=3), MetricRegistry())
+                if base is None:
+                    base = res.throughput
+                rows.append({
+                    "machine": machine, "partitions": n, "centroids": c,
+                    "throughput": round(res.throughput, 3),
+                    "speedup": round(res.throughput / max(base, 1e-9), 3),
+                })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, "fig5_throughput")
+
+    def speedups(machine, c):
+        return [r["speedup"] for r in rows
+                if r["machine"] == machine and r["centroids"] == c]
+
+    lam = speedups("serverless", 1024)
+    dask = speedups("wrangler", 1024)
+    dask_heavy = speedups("wrangler", 8192)
+    assert lam[-1] > 8, f"Lambda should scale ~linearly: {lam}"
+    assert max(dask) < 1.5, f"Dask peak speedup should be tiny: {dask}"
+    assert max(dask_heavy) >= max(dask) - 0.05, \
+        f"compute-heavy Dask should scale no worse: {dask_heavy} vs {dask}"
+    print(f"fig5: Lambda speedup@16={lam[-1]:.1f}; Dask peak={max(dask):.2f} "
+          f"(c=1024) / {max(dask_heavy):.2f} (c=8192)  [claims OK]")
+
+
+if __name__ == "__main__":
+    main()

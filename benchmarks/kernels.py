@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks: wall-clock of the jnp reference paths on this
+host (CPU) + TPU roofline estimates for the Pallas kernels from analytic
+FLOPs/bytes (the kernels themselves are TPU-target; interpret mode validates
+correctness, not speed).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.roofline.analysis import HW
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # kmeans distance: paper workload (n=8000..26000, c up to 8192, d=9)
+    from repro.kernels.kmeans_distance.ref import pairwise_sq_dists_ref
+    for n, c in [(8000, 1024), (16000, 1024), (8000, 8192)]:
+        x = jax.random.normal(key, (n, 9), jnp.float32)
+        cc = jax.random.normal(key, (c, 9), jnp.float32)
+        f = jax.jit(pairwise_sq_dists_ref)
+        us = _time(f, x, cc) * 1e6
+        flops = 3.0 * n * c * 9
+        rows.append({"kernel": "kmeans_distance", "shape": f"n{n}_c{c}_d9",
+                     "us_per_call_cpu": round(us, 1),
+                     "tpu_roofline_us": round(flops / HW["peak_flops"] * 1e6, 2),
+                     "gflops": round(flops / 1e9, 2)})
+
+    # flash attention (ref path timing; TPU estimate from attention FLOPs)
+    from repro.kernels.flash_attention.ref import mha_ref
+    for bh, s, dh in [(8, 1024, 64), (16, 2048, 128)]:
+        q = jax.random.normal(key, (bh, s, dh), jnp.bfloat16)
+        k = jax.random.normal(key, (bh, s, dh), jnp.bfloat16)
+        v = jax.random.normal(key, (bh, s, dh), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: mha_ref(q, k, v))
+        us = _time(f, q, k, v) * 1e6
+        flops = 2.0 * bh * s * s * dh * 2 / 2   # causal halves the work
+        rows.append({"kernel": "flash_attention", "shape": f"bh{bh}_s{s}_d{dh}",
+                     "us_per_call_cpu": round(us, 1),
+                     "tpu_roofline_us": round(flops / HW["peak_flops"] * 1e6, 2),
+                     "gflops": round(flops / 1e9, 2)})
+
+    # SSD scan (chunked jax path)
+    from repro.models.ssm import ssd_chunked
+    for b, s, h, p, n in [(2, 2048, 12, 64, 128)]:
+        x = jax.random.normal(key, (b, s, h, p), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(key, (b, s, h)))
+        A = -jnp.exp(jax.random.normal(key, (h,)) * 0.5)
+        Bm = jax.random.normal(key, (b, s, n), jnp.float32)
+        Cm = jax.random.normal(key, (b, s, n), jnp.float32)
+        f = jax.jit(lambda *a: ssd_chunked(*a, 256))
+        us = _time(f, x, dt, A, Bm, Cm) * 1e6
+        q = 256
+        flops = b * h * (s * q * (n + p) + 2 * s * n * p)   # dual-form chunks
+        rows.append({"kernel": "ssd_scan", "shape": f"b{b}_s{s}_h{h}_p{p}_n{n}",
+                     "us_per_call_cpu": round(us, 1),
+                     "tpu_roofline_us": round(flops / HW["peak_flops"] * 1e6, 2),
+                     "gflops": round(flops / 1e9, 2)})
+    return rows
+
+
+def main() -> None:
+    emit(run(), "kernels")
+    print("kernels: CPU reference timings + TPU roofline estimates emitted")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure + kernels.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Each module prints a ``name,...`` CSV block and asserts the paper's claims
+it reproduces (see per-module docstrings).  The dry-run/roofline tables are
+produced separately by ``repro.launch.dryrun`` (512-device process).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig3_lambda_memory, fig4_latency, fig5_throughput,
+                            fig6_usl_fit, fig7_model_eval, kernels)
+
+    t0 = time.time()
+    for mod in [fig3_lambda_memory, fig4_latency, fig5_throughput,
+                fig6_usl_fit, fig7_model_eval, kernels]:
+        name = mod.__name__.split(".")[-1]
+        print(f"\n===== {name} =====", flush=True)
+        t = time.time()
+        mod.main()
+        print(f"({name}: {time.time() - t:.1f}s)", flush=True)
+    print(f"\nALL BENCHMARKS DONE in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

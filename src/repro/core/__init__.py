@@ -1,0 +1,3 @@
+from repro.core.usl import USLFit, fit_usl, usl_throughput, r_squared, rmse
+
+__all__ = ["USLFit", "fit_usl", "usl_throughput", "r_squared", "rmse"]

@@ -1,0 +1,92 @@
+"""USL-driven predictive autoscaler (the paper's §V future work, implemented).
+
+"We will integrate StreamInsight into the resource management algorithm of
+Pilot-Streaming so as to support predictive scaling, viz., the ability to
+adapt the resource allocations and configurations to changes in the incoming
+data rate(s)."
+
+Given a fitted USL model for a scenario, the autoscaler answers:
+
+* ``partitions_for(target_rate)`` — the smallest N whose predicted
+  throughput sustains the incoming rate (with headroom), clamped at the
+  USL peak: beyond N* adding partitions *reduces* throughput, so the
+  autoscaler never scales into the retrograde region.
+* ``max_sustainable_rate()`` — the peak throughput; incoming rates above it
+  require throttling the source (the paper's "determination of the amount
+  of throttling of data sources to guarantee processing").
+* ``plan(rate_series)`` — partition counts tracking a time-varying rate,
+  with hysteresis to avoid flapping.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.usl import USLFit
+
+__all__ = ["AutoscalePolicy", "Autoscaler"]
+
+
+@dataclass
+class AutoscalePolicy:
+    headroom: float = 0.15         # fraction of spare capacity to keep
+    max_partitions: int = 256
+    scale_down_hysteresis: float = 0.25   # rate must drop this much to downscale
+    min_partitions: int = 1
+
+
+class Autoscaler:
+    def __init__(self, fit: USLFit, policy: AutoscalePolicy | None = None) -> None:
+        self.fit = fit
+        self.policy = policy or AutoscalePolicy()
+        self._current = self.policy.min_partitions
+
+    # -- pure queries ----------------------------------------------------------
+    def usable_peak_n(self) -> int:
+        peak = self.fit.peak_n
+        cap = self.policy.max_partitions
+        if math.isinf(peak):
+            return cap
+        return max(self.policy.min_partitions, min(cap, int(math.floor(peak))))
+
+    def max_sustainable_rate(self) -> float:
+        n = self.usable_peak_n()
+        return float(self.fit.predict(n))
+
+    def partitions_for(self, target_rate: float) -> int | None:
+        """Smallest N sustaining ``target_rate`` (incl. headroom); None if the
+        rate exceeds the system's peak → caller must throttle the source."""
+        need = target_rate * (1.0 + self.policy.headroom)
+        hi = self.usable_peak_n()
+        ns = np.arange(self.policy.min_partitions, hi + 1, dtype=np.float64)
+        pred = self.fit.predict(ns)
+        ok = np.nonzero(pred >= need)[0]
+        if ok.size == 0:
+            return None
+        return int(ns[ok[0]])
+
+    def throttle_rate(self, incoming_rate: float) -> float:
+        """Admissible source rate (paper: "amount of throttling of data
+        sources to guarantee processing")."""
+        return min(incoming_rate, self.max_sustainable_rate() / (1.0 + self.policy.headroom))
+
+    # -- stateful planning -------------------------------------------------------
+    def step(self, observed_rate: float) -> int:
+        """Hysteresis-stabilized partition recommendation for the next window."""
+        want = self.partitions_for(observed_rate)
+        if want is None:
+            want = self.usable_peak_n()
+        if want > self._current:
+            self._current = want                     # scale up promptly
+        elif want < self._current:
+            # only scale down if the needed capacity dropped well below current
+            cur_rate = float(self.fit.predict(self._current))
+            if observed_rate < cur_rate * (1.0 - self.policy.scale_down_hysteresis):
+                self._current = want
+        return self._current
+
+    def plan(self, rate_series) -> list[int]:
+        return [self.step(float(r)) for r in rate_series]

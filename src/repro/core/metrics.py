@@ -1,0 +1,157 @@
+"""Run-id tracing and metric collection (StreamInsight instrumentation layer).
+
+The paper (§IV): "the framework assigns a unique run id, which is propagated
+to all involved components. This way events can be attributed to a specific
+benchmark run."  The instrumentation system is modular — collectors can be
+added/removed per component (producer, broker, processing engine, pilots).
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import uuid
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["new_run_id", "TraceEvent", "MetricRegistry", "Timer", "percentile_summary"]
+
+_counter = itertools.count()
+
+
+def new_run_id(prefix: str = "run") -> str:
+    """Unique run id propagated through producer → broker → processor."""
+    return f"{prefix}-{next(_counter)}-{uuid.uuid4().hex[:8]}"
+
+
+@dataclass(frozen=True)
+class TraceEvent:
+    """A single traced event, attributable to a run id.
+
+    ``component`` is e.g. 'producer', 'broker', 'engine', 'pilot'.
+    ``kind`` is e.g. 'produce', 'append', 'dispatch', 'complete'.
+    Timestamps are in the owning clock's seconds (virtual or wall).
+    """
+
+    run_id: str
+    component: str
+    kind: str
+    ts: float
+    attrs: dict = field(default_factory=dict)
+
+
+class MetricRegistry:
+    """Thread-safe, modular metric/trace collector.
+
+    Collectors register interest in (component, kind) pairs; every component
+    publishes events through a shared registry instance so a benchmark run
+    sees a single coherent trace.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._events: list[TraceEvent] = []
+        self._series: dict[str, list[tuple[float, float]]] = defaultdict(list)
+        self._counters: dict[str, float] = defaultdict(float)
+
+    # -- events ------------------------------------------------------------
+    def emit(self, event: TraceEvent) -> None:
+        with self._lock:
+            self._events.append(event)
+
+    def record(self, run_id: str, component: str, kind: str, ts: float, **attrs) -> None:
+        self.emit(TraceEvent(run_id, component, kind, ts, attrs))
+
+    def events(self, run_id: str | None = None, component: str | None = None,
+               kind: str | None = None) -> list[TraceEvent]:
+        with self._lock:
+            evs = list(self._events)
+        if run_id is not None:
+            evs = [e for e in evs if e.run_id == run_id]
+        if component is not None:
+            evs = [e for e in evs if e.component == component]
+        if kind is not None:
+            evs = [e for e in evs if e.kind == kind]
+        return evs
+
+    # -- time series + counters ---------------------------------------------
+    def observe(self, name: str, ts: float, value: float) -> None:
+        with self._lock:
+            self._series[name].append((ts, value))
+
+    def series(self, name: str) -> np.ndarray:
+        with self._lock:
+            return np.asarray(self._series.get(name, []), dtype=np.float64).reshape(-1, 2)
+
+    def incr(self, name: str, amount: float = 1.0) -> None:
+        with self._lock:
+            self._counters[name] += amount
+
+    def counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    # -- derived metrics -----------------------------------------------------
+    def latencies(self, run_id: str, start_kind: str, end_kind: str,
+                  key: str = "msg_id") -> np.ndarray:
+        """Per-message latency between two event kinds, joined on attrs[key].
+
+        E.g. L^br = append - produce; L^px = complete - append.
+        """
+        starts = {e.attrs.get(key): e.ts for e in self.events(run_id=run_id, kind=start_kind)}
+        out = []
+        for e in self.events(run_id=run_id, kind=end_kind):
+            k = e.attrs.get(key)
+            if k in starts:
+                out.append(e.ts - starts[k])
+        return np.asarray(out, dtype=np.float64)
+
+    def throughput(self, run_id: str, kind: str) -> float:
+        """Events/sec of a given kind over the run's active window."""
+        evs = self.events(run_id=run_id, kind=kind)
+        if len(evs) < 2:
+            return 0.0
+        ts = sorted(e.ts for e in evs)
+        span = ts[-1] - ts[0]
+        if span <= 0:
+            return 0.0
+        return (len(evs) - 1) / span
+
+
+class Timer:
+    """Context manager recording wall-clock duration into a registry series."""
+
+    def __init__(self, registry: MetricRegistry, name: str, clock=None) -> None:
+        import time
+
+        self.registry = registry
+        self.name = name
+        self.clock = clock or time.perf_counter
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = self.clock()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = self.clock() - self._t0
+        self.registry.observe(self.name, self._t0, self.elapsed)
+        return False
+
+
+def percentile_summary(values) -> dict:
+    values = np.asarray(values, dtype=np.float64)
+    if values.size == 0:
+        return {"count": 0}
+    return {
+        "count": int(values.size),
+        "mean": float(values.mean()),
+        "std": float(values.std()),
+        "p50": float(np.percentile(values, 50)),
+        "p95": float(np.percentile(values, 95)),
+        "p99": float(np.percentile(values, 99)),
+        "min": float(values.min()),
+        "max": float(values.max()),
+    }

@@ -1,0 +1,229 @@
+"""Streaming Mini-App: producer → broker → processing, end to end (paper §IV).
+
+Composes the pilot backends, the broker, the backoff producer and the
+streaming engine into the paper's benchmark harness.  A single
+``StreamExperiment`` describes one cell of the paper's parameter space
+(machine M, partitions N, message size MS, workload complexity WC, container
+memory); ``run_experiment`` executes it on the virtual clock and returns the
+measured throughput T^px and latencies L^px / L^br, traced per run-id.
+
+K-Means cost model (paper §IV-B): messages carry ``points`` d=9 float32
+points (≈37 B/point, matching the paper's 296 KB / 8,000 points); workload
+complexity is the centroid count c ∈ [128, 8192].  The distance phase is
+O(n·c·d); ``IMPL_OVERHEAD`` calibrates raw FLOPs to an effective
+sklearn-MiniBatchKMeans rate (Python/numpy overhead ≈ 8×).
+
+Model-sharing consistency policy (see DESIGN.md §2): the paper's measured
+Dask sigma ∈ [0.6, 1.0] — "the peak scalability of the system is already
+reached with a single partition" — is mechanically consistent only with the
+partial_fit executing inside the shared-model critical section; that is the
+``full_fit_locked`` default on HPC.  ``update_locked`` (distances computed
+against a stale model outside the lock) is the beyond-paper optimization
+StreamInsight recommends, and ``lock_free`` is the serverless behaviour
+(S3 last-writer-wins).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.metrics import MetricRegistry, new_run_id, percentile_summary
+from repro.pilot.api import PilotComputeService, PilotDescription, TaskProfile
+from repro.streaming.broker import Broker
+from repro.streaming.engine import SimStreamingEngine, Workload
+from repro.streaming.producer import (AIMD, PartitionIngest, SharedFsIngest,
+                                      SyntheticProducer)
+
+__all__ = ["StreamExperiment", "ExperimentResult", "KMeansStreamWorkload",
+           "run_experiment", "POINT_BYTES", "KMEANS_DIM"]
+
+KMEANS_DIM = 9          # 9 float32 dims + header ≈ 37 B/point (paper: 296 KB / 8,000 pts)
+POINT_BYTES = 37
+IMPL_OVERHEAD = 8.0     # sklearn/python effective-FLOPs calibration
+SERIALIZE_FLOPS_PER_BYTE = 12.0   # pickle/unpickle cost of the model file
+
+
+@dataclass
+class KMeansStreamWorkload:
+    """Maps (points, centroids, policy) to a mechanism-level TaskProfile."""
+
+    points: int = 8000
+    centroids: int = 1024
+    dim: int = KMEANS_DIM
+    policy: str = "full_fit_locked"   # | "update_locked" | "lock_free"
+    n_partitions: int = 1
+
+    @property
+    def msg_bytes(self) -> int:
+        return self.points * POINT_BYTES
+
+    @property
+    def model_bytes(self) -> float:
+        return self.centroids * self.dim * 4.0
+
+    def profile(self) -> TaskProfile:
+        n, c, d = self.points, self.centroids, self.dim
+        distance = 3.0 * n * c * d * IMPL_OVERHEAD
+        update = (2.0 * n * c + 2.0 * n * d + 6.0 * c * d) * IMPL_OVERHEAD
+        serialize = 2.0 * self.model_bytes * SERIALIZE_FLOPS_PER_BYTE
+        decode = 2.0 * self.msg_bytes
+        if self.policy == "full_fit_locked":
+            parallel, serial = decode, distance + update + serialize
+        elif self.policy == "update_locked":
+            parallel, serial = decode + distance, update + serialize
+        elif self.policy == "lock_free":
+            parallel, serial = decode + distance + update + serialize, 0.0
+        else:
+            raise ValueError(f"unknown policy {self.policy!r}")
+        return TaskProfile(
+            flops=parallel,
+            serial_flops=serial,
+            read_bytes=self.model_bytes,
+            write_bytes=self.model_bytes,
+            msg_bytes=self.msg_bytes,
+            coherence_peers=max(0, self.n_partitions - 1),
+            memory_mb=max(64.0, (self.msg_bytes + 2 * self.model_bytes) / 1e6 * 3 + 40),
+        )
+
+
+@dataclass
+class StreamExperiment:
+    """One cell of the paper's parameter space."""
+
+    machine: str = "serverless"         # serverless | wrangler | stampede2
+    partitions: int = 4                 # N^px(p) == N^br(p) (paper constraint)
+    points: int = 8000                  # message size knob (MS)
+    centroids: int = 1024               # workload complexity knob (WC)
+    memory_mb: int = 3008               # Lambda container memory
+    n_messages: int = 200
+    policy: str | None = None           # None → platform default
+    seed: int = 0
+    batch_max: int = 1                  # paper: one Lambda invocation per message
+    backend_attrs: dict = field(default_factory=dict)
+
+    @property
+    def resource_url(self) -> str:
+        return ("serverless://aws-sim" if self.machine == "serverless"
+                else f"hpc://{self.machine}-sim")
+
+    @property
+    def effective_policy(self) -> str:
+        if self.policy is not None:
+            return self.policy
+        return "lock_free" if self.machine == "serverless" else "full_fit_locked"
+
+
+@dataclass
+class ExperimentResult:
+    experiment: StreamExperiment
+    run_id: str
+    throughput: float                  # msgs/s, steady-state window
+    latency_px: dict                   # percentile summary of L^px
+    latency_br: dict                   # percentile summary of L^br
+    runtime_summary: dict              # per-task service times
+    processed: int = 0
+    failed: int = 0
+    retried: int = 0
+    wall_virtual_s: float = 0.0
+
+    def record(self) -> dict:
+        e = self.experiment
+        return dict(machine=e.machine, partitions=e.partitions, points=e.points,
+                    centroids=e.centroids, memory_mb=e.memory_mb,
+                    policy=e.effective_policy, throughput=self.throughput,
+                    latency_px_p50=self.latency_px.get("p50", float("nan")),
+                    latency_px_mean=self.latency_px.get("mean", float("nan")),
+                    latency_px_std=self.latency_px.get("std", float("nan")),
+                    latency_br_p50=self.latency_br.get("p50", float("nan")),
+                    task_p50=self.runtime_summary.get("p50", float("nan")),
+                    processed=self.processed, failed=self.failed)
+
+
+def steady_state_throughput(metrics: MetricRegistry, run_id: str,
+                            warmup_frac: float = 0.25) -> float:
+    """Completions/sec over the post-warmup window (max sustained throughput)."""
+    evs = sorted(e.ts for e in metrics.events(run_id=run_id, kind="complete"))
+    if len(evs) < 4:
+        return 0.0
+    k = int(len(evs) * warmup_frac)
+    window = evs[k:]
+    span = window[-1] - window[0]
+    if span <= 0:
+        return 0.0
+    return (len(window) - 1) / span
+
+
+def run_experiment(exp: StreamExperiment, metrics: MetricRegistry | None = None,
+                   ) -> ExperimentResult:
+    metrics = metrics if metrics is not None else MetricRegistry()
+    run_id = new_run_id(f"{exp.machine}-N{exp.partitions}")
+
+    pcs = PilotComputeService(seed=exp.seed)
+    pilot_desc = PilotDescription(
+        resource=exp.resource_url,
+        memory_mb=exp.memory_mb,
+        partitions=exp.partitions,
+        concurrency=exp.partitions,
+        attrs=dict(exp.backend_attrs),
+    )
+    pilot = pcs.submit_pilot(pilot_desc)
+    backend = pilot.backend
+    sim = backend.sim
+
+    broker = Broker()
+    topic = "points"
+    broker.create_topic(topic, exp.partitions)
+
+    wl = KMeansStreamWorkload(points=exp.points, centroids=exp.centroids,
+                              policy=exp.effective_policy,
+                              n_partitions=exp.partitions)
+    workload = Workload(profile_for=lambda msgs: wl.profile(), name="kmeans")
+
+    # broker ingest path: Kinesis shard limits vs Kafka-on-Lustre
+    if exp.machine == "serverless":
+        ingest = PartitionIngest(sim, exp.partitions, bw_per_partition=1e6)
+    else:
+        fs = backend._pilots[pilot.uid]["fs"]
+        ingest = SharedFsIngest(sim, fs)
+
+    def msg_factory(i: int):
+        return (None, {"n_points": exp.points, "seed": exp.seed * 100003 + i},
+                wl.msg_bytes)
+
+    producer = SyntheticProducer(
+        sim, broker, topic, msg_factory=msg_factory, n_messages=exp.n_messages,
+        run_id=run_id, metrics=metrics,
+        aimd=AIMD(rate_hz=2.0 * exp.partitions, hi_watermark=4 * exp.partitions,
+                  lo_watermark=exp.partitions),
+        ingest=ingest,
+    )
+    engine = SimStreamingEngine(
+        sim, broker, topic, pilot, workload, metrics, run_id,
+        batch_max=exp.batch_max,
+        is_input_complete=lambda: producer.done,
+    )
+
+    producer.start()
+    engine.start()
+    engine.run_to_completion()
+
+    lat_px = metrics.latencies(run_id, "append", "complete")
+    lat_br = metrics.latencies(run_id, "produce", "append")
+    runtimes = np.asarray([cu.runtime for cu in pilot.compute_units
+                           if cu.state.name == "DONE"])
+    result = ExperimentResult(
+        experiment=exp,
+        run_id=run_id,
+        throughput=steady_state_throughput(metrics, run_id),
+        latency_px=percentile_summary(lat_px),
+        latency_br=percentile_summary(lat_br),
+        runtime_summary=percentile_summary(runtimes),
+        processed=engine.core.processed,
+        failed=engine.core.failed_batches,
+        retried=engine.core.retried,
+        wall_virtual_s=sim.now,
+    )
+    pcs.close()
+    return result

@@ -1,0 +1,146 @@
+"""StreamInsight: end-to-end performance experimentation and modeling.
+
+Supports the paper's workflow (§IV): experimental design (parameter grids
+over machine M, parallelism N, message size MS, workload complexity WC,
+container memory), automated execution on the Streaming Mini-App, USL model
+fitting per scenario, and model evaluation on unseen configurations
+(train/test split, RMSE vs number of training configurations — Fig 7).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.metrics import MetricRegistry
+from repro.core.miniapp import ExperimentResult, StreamExperiment, run_experiment
+from repro.core.usl import USLFit, fit_usl, rmse
+
+__all__ = ["ExperimentDesign", "ScenarioModel", "StreamInsight"]
+
+
+@dataclass
+class ExperimentDesign:
+    """Cartesian experiment grid (the paper's control variables)."""
+
+    machines: list = field(default_factory=lambda: ["serverless", "wrangler"])
+    partitions: list = field(default_factory=lambda: [1, 2, 4, 8, 12, 16])
+    points: list = field(default_factory=lambda: [16000])       # MS
+    centroids: list = field(default_factory=lambda: [1024])     # WC
+    memory_mb: list = field(default_factory=lambda: [3008])
+    n_messages: int = 80
+    seed: int = 0
+    policy: str | None = None
+
+    def experiments(self) -> list[StreamExperiment]:
+        out = []
+        for m, n, p, c, mem in itertools.product(
+                self.machines, self.partitions, self.points, self.centroids,
+                self.memory_mb):
+            out.append(StreamExperiment(
+                machine=m, partitions=n, points=p, centroids=c, memory_mb=mem,
+                n_messages=self.n_messages, seed=self.seed, policy=self.policy))
+        return out
+
+
+@dataclass
+class ScenarioModel:
+    """USL model for one (machine, MS, WC, memory) scenario."""
+
+    key: tuple
+    fit: USLFit
+    n: np.ndarray
+    t: np.ndarray
+
+    def __str__(self) -> str:
+        m, p, c, mem = self.key
+        return (f"{m:>10} pts={p:<6} c={c:<5} mem={mem:<5} -> {self.fit.summary()}")
+
+
+class StreamInsight:
+    """Run a design, fit USL per scenario, evaluate prediction quality."""
+
+    def __init__(self, metrics: MetricRegistry | None = None) -> None:
+        self.metrics = metrics or MetricRegistry()
+        self.results: list[ExperimentResult] = []
+
+    # -- execution -----------------------------------------------------------
+    def run(self, design: ExperimentDesign, verbose: bool = False) -> list[ExperimentResult]:
+        for exp in design.experiments():
+            res = run_experiment(exp, self.metrics)
+            self.results.append(res)
+            if verbose:
+                print(f"  ran {exp.machine} N={exp.partitions} pts={exp.points} "
+                      f"c={exp.centroids} mem={exp.memory_mb} -> T={res.throughput:.3f}")
+        return self.results
+
+    def records(self) -> list[dict]:
+        return [r.record() for r in self.results]
+
+    # -- modeling --------------------------------------------------------------
+    @staticmethod
+    def scenario_key(rec: dict) -> tuple:
+        return (rec["machine"], rec["points"], rec["centroids"], rec["memory_mb"])
+
+    def fit_models(self, records: list[dict] | None = None) -> list[ScenarioModel]:
+        records = records if records is not None else self.records()
+        groups: dict[tuple, list[dict]] = {}
+        for rec in records:
+            groups.setdefault(self.scenario_key(rec), []).append(rec)
+        models = []
+        for key, recs in sorted(groups.items()):
+            n = np.array([r["partitions"] for r in recs], dtype=np.float64)
+            t = np.array([r["throughput"] for r in recs], dtype=np.float64)
+            if len(np.unique(n)) < 2:
+                continue
+            models.append(ScenarioModel(key=key, fit=fit_usl(n, t), n=n, t=t))
+        return models
+
+    # -- model evaluation (paper Fig 7) ----------------------------------------
+    def evaluate(self, n_train_configs: int, records: list[dict] | None = None,
+                 seed: int = 0) -> dict:
+        """Train on ``n_train_configs`` partition levels per scenario, report
+        RMSE of throughput predictions on the held-out levels."""
+        records = records if records is not None else self.records()
+        rng = np.random.default_rng(seed)
+        groups: dict[tuple, list[dict]] = {}
+        for rec in records:
+            groups.setdefault(self.scenario_key(rec), []).append(rec)
+        per_scenario = {}
+        for key, recs in sorted(groups.items()):
+            n = np.array([r["partitions"] for r in recs], dtype=np.float64)
+            t = np.array([r["throughput"] for r in recs], dtype=np.float64)
+            levels = np.unique(n)
+            if len(levels) <= n_train_configs or n_train_configs < 2:
+                continue
+            # anchor the design range (min AND max level), sample the middle
+            middle = levels[(levels > levels.min()) & (levels < levels.max())]
+            n_mid = max(n_train_configs - 2, 0)
+            chosen = (rng.choice(middle, size=n_mid, replace=False)
+                      if n_mid else np.array([]))
+            train_levels = np.concatenate([[levels.min(), levels.max()], chosen])
+            tr = np.isin(n, train_levels)
+            fit = fit_usl(n[tr], t[tr])
+            pred = fit.predict(n[~tr])
+            per_scenario[key] = dict(
+                rmse=rmse(t[~tr], pred),
+                rel_rmse=rmse(t[~tr], pred) / max(float(np.mean(t[~tr])), 1e-12),
+                n_train=int(tr.sum()), n_test=int((~tr).sum()),
+                sigma=fit.sigma, kappa=fit.kappa)
+        agg = {
+            "n_train_configs": n_train_configs,
+            "mean_rmse": float(np.mean([v["rmse"] for v in per_scenario.values()]))
+            if per_scenario else float("nan"),
+            "mean_rel_rmse": float(np.mean([v["rel_rmse"] for v in per_scenario.values()]))
+            if per_scenario else float("nan"),
+            "scenarios": per_scenario,
+        }
+        return agg
+
+    def report(self) -> str:
+        lines = ["StreamInsight scenario models (USL):"]
+        for m in self.fit_models():
+            lines.append("  " + str(m))
+        return "\n".join(lines)

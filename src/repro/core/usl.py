@@ -1,0 +1,241 @@
+"""Universal Scalability Law (USL) model — the analytical core of StreamInsight.
+
+The paper (§IV-A) models streaming-system throughput as
+
+    T(N) = gamma * N / (1 + sigma*(N - 1) + kappa*N*(N - 1))
+
+where
+  * ``N``      is the parallelism (number of partitions of the processing system),
+  * ``sigma``  is the *contention* coefficient (serial fraction / shared-resource
+               queueing — e.g. serialization, shared filesystem bandwidth),
+  * ``kappa``  is the *coherence* coefficient (pairwise synchronization cost —
+               e.g. all-to-all model-parameter sharing),
+  * ``gamma``  is the throughput of a single worker (the paper normalizes
+               T(1)=1, i.e. gamma fixed to the single-partition throughput; we
+               expose both behaviours).
+
+``sigma = kappa = 0`` is linear scaling; ``kappa = 0`` reduces to Amdahl's law;
+``kappa > 0`` produces a throughput *peak* at ``N* = sqrt((1 - sigma)/kappa)``
+followed by retrograde scaling — the behaviour the paper observes for
+Kafka/Dask on HPC shared filesystems.
+
+Fitting is nonlinear least squares: a coarse log-grid seed followed by a
+Levenberg–Marquardt refinement with parameters projected onto the feasible
+region (sigma >= 0, kappa >= 0, gamma > 0).  Pure numpy — no scipy/R
+dependency (the paper uses the `usl` R package; this is a from-scratch
+equivalent validated by property tests).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "usl_throughput",
+    "USLFit",
+    "fit_usl",
+    "r_squared",
+    "rmse",
+]
+
+
+def usl_throughput(n, sigma: float, kappa: float, gamma: float = 1.0):
+    """Evaluate T(N) for scalar or array ``n``."""
+    n = np.asarray(n, dtype=np.float64)
+    denom = 1.0 + sigma * (n - 1.0) + kappa * n * (n - 1.0)
+    return gamma * n / denom
+
+
+def r_squared(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    ss_res = float(np.sum((y_true - y_pred) ** 2))
+    ss_tot = float(np.sum((y_true - np.mean(y_true)) ** 2))
+    if ss_tot == 0.0:
+        return 1.0 if ss_res == 0.0 else 0.0
+    return 1.0 - ss_res / ss_tot
+
+
+def rmse(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    return float(np.sqrt(np.mean((y_true - y_pred) ** 2)))
+
+
+@dataclass
+class USLFit:
+    """Result of fitting the USL to (N, T) observations."""
+
+    sigma: float
+    kappa: float
+    gamma: float
+    r2: float
+    rmse: float
+    n_obs: int
+    fixed_gamma: bool = False
+    history: list = field(default_factory=list, repr=False)
+
+    def predict(self, n):
+        return usl_throughput(n, self.sigma, self.kappa, self.gamma)
+
+    @property
+    def peak_n(self) -> float:
+        """Parallelism that maximizes T(N); inf if scaling never retrogrades."""
+        if self.kappa <= 0.0:
+            return math.inf
+        return math.sqrt(max(0.0, 1.0 - self.sigma) / self.kappa)
+
+    @property
+    def peak_throughput(self) -> float:
+        n = self.peak_n
+        if math.isinf(n):
+            return math.inf
+        return float(usl_throughput(max(n, 1.0), self.sigma, self.kappa, self.gamma))
+
+    def efficiency(self, n):
+        """Fraction of linear scaling retained at parallelism n."""
+        return self.predict(n) / (self.gamma * np.asarray(n, dtype=np.float64))
+
+    def summary(self) -> str:
+        peak = self.peak_n
+        peak_s = f"{peak:.1f}" if math.isfinite(peak) else "inf"
+        return (
+            f"USL(sigma={self.sigma:.4f}, kappa={self.kappa:.6f}, "
+            f"gamma={self.gamma:.3f}) R2={self.r2:.4f} RMSE={self.rmse:.4g} "
+            f"peak_N={peak_s}"
+        )
+
+
+def _solve_gamma(n, t, sigma: float, kappa: float) -> float:
+    """Closed-form optimal gamma for fixed (sigma, kappa): linear LSQ."""
+    base = usl_throughput(n, sigma, kappa, 1.0)
+    denom = float(np.dot(base, base))
+    if denom == 0.0:
+        return 1.0
+    return max(float(np.dot(base, t)) / denom, 1e-12)
+
+
+def _residuals(params, n, t, fixed_gamma):
+    sigma, kappa = params[0], params[1]
+    gamma = fixed_gamma if fixed_gamma is not None else params[2]
+    return usl_throughput(n, sigma, kappa, gamma) - t
+
+
+def _jacobian(params, n, fixed_gamma):
+    """Analytic Jacobian of T(N; sigma, kappa, gamma) wrt the free params."""
+    sigma, kappa = params[0], params[1]
+    gamma = fixed_gamma if fixed_gamma is not None else params[2]
+    denom = 1.0 + sigma * (n - 1.0) + kappa * n * (n - 1.0)
+    t_over_gamma = n / denom
+    # dT/dsigma = -gamma * n * (n-1) / denom^2 ; dT/dkappa likewise with n(n-1)
+    d_sigma = -gamma * n * (n - 1.0) / (denom**2)
+    d_kappa = -gamma * n * n * (n - 1.0) / (denom**2)
+    cols = [d_sigma, d_kappa]
+    if fixed_gamma is None:
+        cols.append(t_over_gamma)
+    return np.stack(cols, axis=1)
+
+
+def fit_usl(
+    n,
+    t,
+    *,
+    fix_gamma: bool = False,
+    max_iter: int = 200,
+    tol: float = 1e-12,
+) -> USLFit:
+    """Fit the USL to observations.
+
+    Parameters
+    ----------
+    n : array of parallelism levels (>= 1)
+    t : array of measured throughputs (same length)
+    fix_gamma : if True, pin gamma to the mean throughput observed at the
+        smallest N (the paper's normalization); otherwise gamma is fitted.
+
+    Strategy: coarse log-grid over (sigma, kappa) with closed-form gamma,
+    then Levenberg–Marquardt from the best seed, parameters projected to
+    sigma >= 0, kappa >= 0 after each accepted step.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    t = np.asarray(t, dtype=np.float64)
+    if n.shape != t.shape or n.ndim != 1:
+        raise ValueError(f"n and t must be 1-D and same shape, got {n.shape} vs {t.shape}")
+    if n.size < 2:
+        raise ValueError("need at least 2 observations to fit USL")
+    if np.any(n < 1.0):
+        raise ValueError("parallelism N must be >= 1")
+    if np.any(t < 0.0):
+        raise ValueError("throughput must be non-negative")
+
+    fixed_gamma = None
+    if fix_gamma:
+        n_min = n.min()
+        fixed_gamma = float(np.mean(t[n == n_min]) / usl_throughput(n_min, 0.0, 0.0, 1.0))
+        fixed_gamma = max(fixed_gamma, 1e-12)
+
+    # --- coarse grid seed -------------------------------------------------
+    sigma_grid = np.concatenate([[0.0], np.logspace(-4, 0, 17)])
+    kappa_grid = np.concatenate([[0.0], np.logspace(-6, 0, 19)])
+    best = None
+    for s in sigma_grid:
+        for k in kappa_grid:
+            g = fixed_gamma if fixed_gamma is not None else _solve_gamma(n, t, s, k)
+            res = usl_throughput(n, s, k, g) - t
+            sse = float(np.dot(res, res))
+            if best is None or sse < best[0]:
+                best = (sse, s, k, g)
+    _, s0, k0, g0 = best
+
+    # --- Levenberg–Marquardt refinement ----------------------------------
+    if fixed_gamma is not None:
+        params = np.array([s0, k0], dtype=np.float64)
+    else:
+        params = np.array([s0, k0, g0], dtype=np.float64)
+    lam = 1e-3
+    res = _residuals(params, n, t, fixed_gamma)
+    sse = float(np.dot(res, res))
+    history = [(params.copy(), sse)]
+    for _ in range(max_iter):
+        jac = _jacobian(params, n, fixed_gamma)
+        jtj = jac.T @ jac
+        jtr = jac.T @ res
+        try:
+            step = np.linalg.solve(jtj + lam * np.diag(np.maximum(np.diag(jtj), 1e-12)), -jtr)
+        except np.linalg.LinAlgError:
+            break
+        cand = params + step
+        cand[0] = max(cand[0], 0.0)  # sigma >= 0
+        cand[1] = max(cand[1], 0.0)  # kappa >= 0
+        if fixed_gamma is None:
+            cand[2] = max(cand[2], 1e-12)
+        cand_res = _residuals(cand, n, t, fixed_gamma)
+        cand_sse = float(np.dot(cand_res, cand_res))
+        if cand_sse < sse:
+            rel = (sse - cand_sse) / max(sse, 1e-30)
+            params, res, sse = cand, cand_res, cand_sse
+            lam = max(lam / 3.0, 1e-12)
+            history.append((params.copy(), sse))
+            if rel < tol:
+                break
+        else:
+            lam *= 4.0
+            if lam > 1e12:
+                break
+
+    sigma, kappa = float(params[0]), float(params[1])
+    gamma = float(fixed_gamma if fixed_gamma is not None else params[2])
+    pred = usl_throughput(n, sigma, kappa, gamma)
+    return USLFit(
+        sigma=sigma,
+        kappa=kappa,
+        gamma=gamma,
+        r2=r_squared(t, pred),
+        rmse=rmse(t, pred),
+        n_obs=int(n.size),
+        fixed_gamma=fix_gamma,
+        history=history,
+    )

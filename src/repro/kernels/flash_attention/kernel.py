@@ -1,0 +1,108 @@
+"""Pallas TPU flash-attention (causal, GQA) — forward kernel.
+
+Dataflow (FlashAttention [arXiv:2205.14135] adapted to the TPU grid model):
+grid = (B·H, S/block_q, S/block_k); the trailing kv axis is sequential on
+TPU, so the online-softmax running state (m, l, acc) lives in VMEM scratch
+that persists across kv steps for a fixed (head, q-block).  The output tile
+is written once, on the last kv block.  Causal masking skips fully-masked
+kv blocks via ``pl.when`` (no FLOPs issued for the upper triangle at
+block granularity).
+
+GQA: q rows are (B·H); k/v rows are (B·KV); the BlockSpec index maps divide
+by the group size G = H/KV, so no repeated-KV materialization ever happens.
+
+Block sizes default to 128×128 (MXU-aligned); d_head is padded to the
+128-lane boundary by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_k, n_kv_blocks, causal):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level causal skip: kv block strictly after q block -> no work
+    needed = (j * block_k <= i * block_q + block_q - 1) if causal else True
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale                    # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False):
+    """q (BH, S, Dh); k, v (BKV, S, Dh), BH = BKV·G.  S % block == 0,
+    Dh % 128 == 0 (ops.py pads).  Returns (BH, S, Dh) in q.dtype."""
+    BH, S, Dh = q.shape
+    BKV = k.shape[0]
+    assert BH % BKV == 0, (BH, BKV)
+    G = BH // BKV
+    bq, bk = min(block_q, S), min(block_k, S)
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / math.sqrt(Dh)
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=bq,
+                               block_k=bk, n_kv_blocks=nk, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda b, i, j, G=G: (b // G, j, 0)),
+            pl.BlockSpec((1, bk, Dh), lambda b, i, j, G=G: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

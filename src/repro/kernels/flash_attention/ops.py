@@ -1,0 +1,45 @@
+"""Jitted wrapper for the flash-attention kernel (padding + dispatch).
+
+Padding correctness: Dh is padded to the 128-lane boundary — the extra key
+dims are zero so q·k is unchanged, and q is pre-scaled by
+sqrt(Dh_pad / Dh) so the kernel's internal 1/sqrt(Dh_pad) lands on the true
+1/sqrt(Dh).  S is padded to the block size — with causal masking real query
+rows never see padded key positions, and padded query rows are sliced off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention.ref import mha_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool | None = None,
+                    interpret: bool = False, block_q: int | None = None,
+                    block_k: int | None = None):
+    """q (BH, S, Dh); k, v (BKV, S, Dh) with BH = BKV·G (GQA)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return mha_ref(q, k, v, causal=causal)
+    assert causal, "padded flash path supports causal attention only"
+    BH, S, Dh = q.shape
+    pad_d = (-Dh) % 128
+    bq = block_q or min(_k.DEFAULT_BLOCK_Q, max(8, S))
+    bk = block_k or min(_k.DEFAULT_BLOCK_K, max(8, S))
+    pad_s = (-S) % max(bq, bk)
+    qs = q * jnp.sqrt((Dh + pad_d) / Dh).astype(q.dtype)
+    if pad_d or pad_s:
+        pads = ((0, 0), (0, pad_s), (0, pad_d))
+        qs = jnp.pad(qs, pads)
+        k = jnp.pad(k, pads)
+        v = jnp.pad(v, pads)
+    out = _k.flash_attention_pallas(qs, k, v, causal=True,
+                                    block_q=min(bq, qs.shape[1]),
+                                    block_k=min(bk, qs.shape[1]),
+                                    interpret=interpret)
+    return out[:, :S, :Dh]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal GQA)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def mha_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q (BH, S, Dh); k, v (BKV, S, Dh) with BH = BKV * G.  fp32 math."""
+    BH, S, Dh = q.shape
+    BKV = k.shape[0]
+    G = BH // BKV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(Dh).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=0)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

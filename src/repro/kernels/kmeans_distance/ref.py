@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the K-Means distance/assignment kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pairwise_sq_dists_ref", "assign_ref"]
+
+
+def pairwise_sq_dists_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(n, d), (k, d) -> (n, k) squared Euclidean distances.
+
+    Matmul formulation ||x||^2 + ||c||^2 - 2 x c^T (what the MXU kernel
+    tiles), clamped at zero against rounding.
+    """
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)            # (n, 1)
+    cn = jnp.sum(c * c, axis=-1, keepdims=True).T          # (1, k)
+    d2 = xn + cn - 2.0 * (x @ c.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def assign_ref(x: jnp.ndarray, c: jnp.ndarray):
+    """Fused assignment: returns (labels (n,) int32, min_sq_dist (n,))."""
+    d2 = pairwise_sq_dists_ref(x, c)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD kernel: the naive O(S) recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0=None):
+    """Sequential state-space recurrence (Mamba-2 §3, eq. 1-2).
+
+    x  (B, S, H, P); dt (B, S, H); A (H,) negative; Bm, Cm (B, S, N).
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t ;  y_t = C_t · h_t
+    Returns y (B, S, H, P) fp32 and final h (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P) (B,H) (B,N) (B,N)
+        a = jnp.exp(dtt * A[None])                  # (B,H)
+        h = h * a[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h

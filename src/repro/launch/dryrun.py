@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, and derive the roofline terms.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the dry-run needs 512 placeholder host devices for the
+(2, 16, 16) multi-pod mesh.  Run as a module:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+Per cell this produces:
+  * scanned compile on the single-pod (16,16) mesh *and* the multi-pod
+    (2,16,16) mesh — the runnability proof + memory_analysis();
+  * unrolled 1-group / 2-group analysis compiles (single-pod) whose
+    per-group cost delta extrapolates exact full-depth FLOPs / bytes /
+    collective-bytes (see roofline.analysis docstring for why scanned
+    compiles cannot be used for costs);
+  * the three roofline terms + bottleneck + MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+from repro.roofline.analysis import (CellCost, extrapolate, model_flops,
+                                     roofline_terms, tree_local_bytes)
+
+# decode cells of full-attention archs at 500k are skipped per assignment
+# (DESIGN.md §Arch-applicability)
+
+
+def _mem_stats(compiled) -> dict:
+    m = compiled.memory_analysis()
+    if m is None:
+        return {}
+    return {k: int(getattr(m, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes") if hasattr(m, k)}
+
+
+def _unrolled_cfg(cfg, n_groups: int):
+    n_layers = len(cfg.block_pattern) * n_groups + len(cfg.tail_pattern)
+    return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False,
+                               remat="none")
+
+
+def _memory_floor(shape, sds) -> float:
+    """Sharding-exact per-device bytes that must cross HBM once per step."""
+    if shape.kind == "train":
+        params_sds, opt_sds, batch_sds = sds
+        # params: fwd read + bwd read + update write; moments: read + write
+        return (3 * tree_local_bytes(params_sds)
+                + 2 * tree_local_bytes(opt_sds)
+                + tree_local_bytes(batch_sds))
+    if shape.kind == "prefill":
+        params_sds, batch_sds = sds
+        return tree_local_bytes(params_sds) + tree_local_bytes(batch_sds)
+    params_sds, caches_sds, tok_sds, _pos = sds   # decode
+    return (tree_local_bytes(params_sds) + tree_local_bytes(caches_sds)
+            + tree_local_bytes(tok_sds))
+
+
+def compile_cell(cfg, shape, mesh, label: str, policy: str = "default") -> dict:
+    t0 = time.time()
+    with mesh:
+        jitted, sds, _rules = build_cell(cfg, shape, mesh, policy=policy)
+        lowered = jitted.lower(*sds)
+        compiled = lowered.compile()
+    info = {"label": label, "compile_s": round(time.time() - t0, 1),
+            "memory": _mem_stats(compiled),
+            "memory_floor_bytes": _memory_floor(shape, sds)}
+    return info, compiled
+
+
+def run_cell(arch: str, shape_name: str, *, analysis: bool = True,
+             skip_multipod: bool = False, policy: str = "default") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "policy": policy,
+           "params_b": cfg.param_count() / 1e9,
+           "active_params_b": cfg.active_param_count() / 1e9}
+    ok, why = cfg.supports_shape(shape)
+    if not ok:
+        rec["status"] = "SKIP"
+        rec["why"] = why
+        return rec
+    try:
+        # 1) scanned production compile, single-pod
+        mesh1 = make_production_mesh(multi_pod=False)
+        info1, compiled1 = compile_cell(cfg, shape, mesh1, "single_pod", policy)
+        rec["single_pod"] = info1
+        # 2) scanned production compile, multi-pod (the 512-chip proof)
+        if not skip_multipod:
+            mesh2 = make_production_mesh(multi_pod=True)
+            info2, _ = compile_cell(cfg, shape, mesh2, "multi_pod", policy)
+            rec["multi_pod"] = info2
+        # 3) roofline analysis from unrolled 1g / 2g compiles (single-pod)
+        if analysis:
+            _, comp_g1 = compile_cell(_unrolled_cfg(cfg, 1), shape, mesh1, "g1",
+                                      policy)
+            _, comp_g2 = compile_cell(_unrolled_cfg(cfg, 2), shape, mesh1, "g2",
+                                      policy)
+            cost = extrapolate(CellCost.from_compiled(comp_g1),
+                               CellCost.from_compiled(comp_g2), cfg.n_groups)
+            n_dev = 256
+            terms = roofline_terms(
+                cost, memory_floor_bytes=info1.get("memory_floor_bytes", 0.0))
+            mf = model_flops(cfg, shape, n_dev)
+            rec["cost"] = {"flops_per_dev": cost.flops,
+                           "bytes_per_dev": cost.bytes_accessed,
+                           "collective_bytes_per_dev": cost.collective_bytes,
+                           "collectives": cost.collectives}
+            rec["roofline"] = terms
+            rec["model_flops_per_dev"] = mf
+            rec["useful_flops_ratio"] = (mf / cost.flops) if cost.flops else 0.0
+        rec["status"] = "OK"
+    except Exception as e:  # noqa: BLE001 — record failures per cell
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--skip-multipod", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON")
+    ap.add_argument("--policy", default="default",
+                    choices=["default", "fsdp", "fsdp_ep", "moe_noseq", "moe_a2a", "decode_kv"])
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_configs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        print(f"=== {arch} × {shape}", flush=True)
+        rec = run_cell(arch, shape, analysis=not args.no_analysis,
+                       skip_multipod=args.skip_multipod, policy=args.policy)
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "OK" and "roofline" in rec:
+            r = rec["roofline"]
+            extra = (f" bottleneck={r['bottleneck']}"
+                     f" compute={r['compute_s']:.4f}s"
+                     f" mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s")
+        print(f"    -> {status}{extra}", flush=True)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            suffix = "" if args.policy == "default" else f"__{args.policy}"
+            with open(os.path.join(args.out, f"{arch}__{shape}{suffix}.json"), "w") as f:
+                json.dump(rec, f, indent=1)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"SUMMARY: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL / {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

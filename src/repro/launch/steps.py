@@ -1,0 +1,173 @@
+"""Step-function + sharding assembly shared by launchers and the dry-run.
+
+``build_train`` / ``build_prefill`` / ``build_decode`` return
+(jitted_fn, abstract_inputs, rules) for an (arch config, shape, mesh) cell:
+abstract inputs are ShapeDtypeStructs (no allocation), shardings follow the
+logical rules in ``distributed.sharding``, and batch-replication kicks in
+automatically for cells whose global batch cannot fill the data axes
+(long_500k B=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec, pad_for_mesh
+from repro.distributed.sharding import (Rules, make_decode_kv_rules,
+                                        make_default_rules, make_fsdp_rules,
+                                        make_moe_a2a_rules,
+                                        make_moe_noseq_rules, shapes_of,
+                                        tree_shardings, use_rules, zero_specs)
+from repro.models import model as M
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+__all__ = ["make_rules_for", "build_train", "build_prefill", "build_decode",
+           "build_cell"]
+
+
+
+def _attach(sds_tree, sh_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, sh_tree)
+
+def make_rules_for(mesh, global_batch: int, policy: str = "default") -> Rules:
+    multi_pod = "pod" in mesh.axis_names
+    makers = {"default": make_default_rules, "fsdp": make_fsdp_rules,
+              "fsdp_ep": lambda mp: make_fsdp_rules(mp, ep=True),
+              "moe_noseq": make_moe_noseq_rules,
+              "moe_a2a": make_moe_a2a_rules,
+              "decode_kv": make_decode_kv_rules}
+    rules = makers[policy](multi_pod)
+    rules.mesh = mesh
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if policy == "fsdp":
+        dp *= mesh.shape.get("model", 1)
+    # fsdp_ep keeps batch on pod×data only (model axis carries experts)
+    if global_batch % dp != 0:
+        # cannot shard the batch evenly (e.g. B=1 long-context): replicate
+        rules.table = dict(rules.table)
+        rules.table["batch"] = None
+        rules.table["opt"] = None
+    return rules
+
+
+def _batch_sds(cfg: ModelConfig, B: int, S: int, mesh, rules: Rules):
+    sh = NamedSharding(mesh, rules.pspec(("batch", None)))
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh)}
+    if cfg.frontend is not None:
+        sh3 = NamedSharding(mesh, rules.pspec(("batch", None, None)))
+        batch["embeds"] = jax.ShapeDtypeStruct((B, cfg.n_prefix, cfg.d_model),
+                                               jnp.float32, sharding=sh3)
+    return batch
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_train(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                n_microbatches: int = 1, opt_cfg: OptimizerConfig | None = None,
+                policy: str = "default"):
+    rules = make_rules_for(mesh, shape.global_batch, policy)
+    opt_cfg = opt_cfg or OptimizerConfig()
+    params_sds = _abstract_params(cfg)
+    opt_sds = jax.eval_shape(lambda: init_opt_state(params_sds))
+    pspecs = M.param_specs(cfg)
+    param_sh = tree_shardings(mesh, pspecs, rules)
+    zspecs = zero_specs(pspecs, shapes_of(params_sds), rules, mesh)
+    moment_sh = tree_shardings(mesh, zspecs, rules)
+    opt_sh = type(opt_sds)(step=_replicated(mesh), mu=moment_sh, nu=moment_sh)
+    batch_sds = _batch_sds(cfg, shape.global_batch, shape.seq_len, mesh, rules)
+    batch_sh = jax.tree.map(lambda s: s.sharding, batch_sds)
+
+    step_fn = make_train_step(cfg, opt_cfg, n_microbatches)
+
+    def traced(params, opt_state, batch):
+        with use_rules(rules):
+            return step_fn(params, opt_state, batch)
+
+    jitted = jax.jit(
+        traced,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, _replicated(mesh)),
+        donate_argnums=(0, 1),
+    )
+    params_sds = _attach(params_sds, param_sh)
+    opt_sds = _attach(opt_sds, opt_sh)
+    return jitted, (params_sds, opt_sds, batch_sds), rules
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                  policy: str = "default"):
+    rules = make_rules_for(mesh, shape.global_batch, policy)
+    params_sds = _abstract_params(cfg)
+    param_sh = tree_shardings(mesh, M.param_specs(cfg), rules)
+    batch_sds = _batch_sds(cfg, shape.global_batch, shape.seq_len, mesh, rules)
+    cache_sh = tree_shardings(mesh, M.cache_specs(cfg), rules)
+    logits_sh = NamedSharding(mesh, rules.pspec(("batch", "vocab")))
+
+    def serve_prefill(params, batch):
+        with use_rules(rules):
+            return M.prefill(params, cfg, batch["tokens"],
+                             cache_len=shape.seq_len,
+                             embeds=batch.get("embeds"))
+
+    jitted = jax.jit(
+        serve_prefill,
+        in_shardings=(param_sh, jax.tree.map(lambda s: s.sharding, batch_sds)),
+        out_shardings=(logits_sh, cache_sh),
+    )
+    params_sds = _attach(params_sds, param_sh)
+    return jitted, (params_sds, batch_sds), rules
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                 policy: str = "default"):
+    """serve_step: ONE new token against a cache of shape.seq_len entries."""
+    rules = make_rules_for(mesh, shape.global_batch, policy)
+    params_sds = _abstract_params(cfg)
+    param_sh = tree_shardings(mesh, M.param_specs(cfg), rules)
+    with use_rules(rules):   # cache dtype from cfg
+        caches_sds = jax.eval_shape(
+            lambda: M.cache_init(cfg, shape.global_batch, shape.seq_len))
+    cache_sh = tree_shardings(mesh, M.cache_specs(cfg), rules)
+    tok_sh = NamedSharding(mesh, rules.pspec(("batch",)))
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                                   sharding=tok_sh)
+    logits_sh = NamedSharding(mesh, rules.pspec(("batch", "vocab")))
+
+    def serve_decode(params, caches, token, pos):
+        with use_rules(rules):
+            return M.decode_step(params, cfg, token, caches, pos)
+
+    jitted = jax.jit(
+        serve_decode,
+        in_shardings=(param_sh, cache_sh, tok_sh, _replicated(mesh)),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=_replicated(mesh))
+    params_sds = _attach(params_sds, param_sh)
+    caches_sds = _attach(caches_sds, cache_sh)
+    return jitted, (params_sds, caches_sds, tok_sds, pos_sds), rules
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, policy: str = "default",
+               **kw):
+    cfg = pad_for_mesh(cfg, mesh.shape.get("model", 1),
+                       pad_kv=(policy == "decode_kv"))
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, policy=policy, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, policy=policy)
+    return build_decode(cfg, shape, mesh, policy=policy)

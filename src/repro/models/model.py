@@ -1,0 +1,164 @@
+"""Language-model API: init / loss / prefill / decode across all 10 archs.
+
+Modality frontends ([audio]/[vlm] archs) are stubs per the assignment: the
+first ``cfg.n_prefix`` sequence positions take precomputed frame/patch
+embeddings (supplied by ``input_specs``) instead of token embeddings; the
+loss masks those positions.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import transformer as tf
+from repro.models.layers import (embed_tokens, embedding_init, embedding_specs,
+                                 logits_head, norm_init, norm_specs,
+                                 sinusoidal_pos_emb)
+
+__all__ = ["init_params", "param_specs", "forward", "loss_fn", "prefill",
+           "decode_step", "cache_init", "cache_specs"]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(key, cfg):
+    dtype = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "embedding": embedding_init(k1, cfg, dtype),
+        "stack": tf.stack_init(k2, cfg, dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm_type, dtype),
+    }
+
+
+def param_specs(cfg):
+    return {
+        "embedding": embedding_specs(cfg),
+        "stack": tf.stack_specs(cfg),
+        "final_norm": norm_specs(cfg.norm_type),
+    }
+
+
+def _embed_inputs(params, cfg, tokens, embeds, positions):
+    x = embed_tokens(params["embedding"], tokens).astype(_dtype(cfg))
+    if cfg.frontend is not None and embeds is not None:
+        x = jax.lax.dynamic_update_slice(
+            x, embeds.astype(x.dtype), (0, 0, 0))
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal_pos_emb(positions, cfg.d_model).astype(x.dtype)
+    return constrain(x, ("batch", "act_seq", None))
+
+
+def forward(params, cfg, tokens, embeds=None):
+    """tokens (B, S) -> logits (B, S, V) float32."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed_inputs(params, cfg, tokens, embeds, positions)
+    x, _ = tf.apply_stack(params["stack"], cfg, x, positions)
+    x = tf.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    return logits_head(params["embedding"], cfg, x)
+
+
+def _xent(logits, labels, mask):
+    """logits (B,S,V) fp32, labels (B,S) int32, mask (B,S) -> mean nll."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg, batch):
+    """batch: {"tokens": (B,S) int32, optional "embeds": (B,n_prefix,d)}.
+    Next-token prediction; frontend-prefix positions are masked out."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed_inputs(params, cfg, tokens, batch.get("embeds"), positions)
+    x, _ = tf.apply_stack(params["stack"], cfg, x, positions)
+    x = tf.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    labels = tokens[:, 1:]
+    mask = (positions[:, 1:] >= cfg.n_prefix).astype(jnp.float32)
+    h = x[:, :-1]
+    if cfg.loss_chunk and (S - 1) % cfg.loss_chunk == 0 and S - 1 > cfg.loss_chunk:
+        # chunk the vocab projection over the sequence: peak memory is one
+        # (B, chunk, V) logits block instead of (B, S, V)
+        C = cfg.loss_chunk
+        N = (S - 1) // C
+        hc = jnp.moveaxis(h.reshape(B, N, C, -1), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(B, N, C), 1, 0)
+        mc = jnp.moveaxis(mask.reshape(B, N, C), 1, 0)
+
+        def chunk_loss(carry, inp):
+            hb, lb, mb = inp
+            logits = logits_head(params["embedding"], cfg, hb)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+            nll, msum = carry
+            return (nll + ((logz - gold) * mb).sum(), msum + mb.sum()), None
+
+        (nll, msum), _ = jax.lax.scan(chunk_loss, (0.0, 0.0), (hc, lc, mc))
+        return nll / jnp.maximum(msum, 1.0)
+    logits = logits_head(params["embedding"], cfg, h)
+    return _xent(logits, labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg, batch, cache_len, dtype=None):
+    return tf.stack_cache_init(cfg, batch, cache_len, dtype or _dtype(cfg))
+
+
+def cache_specs(cfg):
+    return tf.stack_cache_specs(cfg)
+
+
+def prefill(params, cfg, tokens, cache_len=None, embeds=None):
+    """Process a prompt, returning (last-position logits, filled caches)."""
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed_inputs(params, cfg, tokens, embeds, positions)
+    caches = cache_init(cfg, B, cache_len)
+    x, caches = tf.apply_stack(params["stack"], cfg, x, positions, caches)
+    x = tf.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = logits_head(params["embedding"], cfg, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg, token, caches, pos):
+    """token (B,) int32; pos scalar int32 (position of this token).
+    Returns (logits (B, V) fp32, new caches)."""
+    B = token.shape[0]
+    x = embed_tokens(params["embedding"], token[:, None]).astype(_dtype(cfg))
+    if cfg.pos_emb == "sinusoidal":
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        x = x + sinusoidal_pos_emb(posv, cfg.d_model).astype(x.dtype)
+    x, caches = tf.decode_stack(params["stack"], cfg, x, caches, pos)
+    x = tf.apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    logits = logits_head(params["embedding"], cfg, x)
+    return logits[:, 0], caches
+
+
+def greedy_generate(params, cfg, prompt, n_new, cache_len=None):
+    """Simple serving loop for examples/tests: prompt (B, S) -> (B, n_new)."""
+    B, S = prompt.shape
+    cache_len = cache_len or (S + n_new)
+    logits, caches = prefill(params, cfg, prompt, cache_len)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def body(carry, i):
+        tok, caches = carry
+        logits, caches = decode_step(params, cfg, tok, caches, S + i)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, caches), tok
+
+    (_, _), toks = jax.lax.scan(body, (tok, caches), jnp.arange(n_new))
+    return jnp.moveaxis(toks, 0, 1)

@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).  [arXiv:2402.19427]
+
+Block: u -> (x = W_x u, gate = gelu(W_y u)) ; causal depthwise conv(4) on x;
+RG-LRU gated linear recurrence; out = (lru ⊙ gate) @ W_out.
+
+RG-LRU per channel:
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)            input gate
+    a_t = exp(c · r_t · (-softplus(Λ)))     with c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The linear recurrence h_t = a_t h_{t-1} + b_t runs as an associative scan
+over the sequence (log-depth on TPU); decode is the single-step recurrence
+with a (B, W) hidden state + conv history — O(1) in context length, which is
+why the hybrid runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+__all__ = ["rglru_init", "rglru_specs", "apply_rglru", "rglru_cache_init",
+           "rglru_cache_specs", "rglru_decode_step"]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def _width(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg, dtype):
+    d, w = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 6)
+    # Λ init so a^c spans ~(0.9, 0.999) as in the paper
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))   # softplus^-1(-log u / c)
+    return {
+        "w_x": dense_init(ks[0], (d, w), d, dtype),
+        "w_gate": dense_init(ks[1], (d, w), d, dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, w), jnp.float32) / 2.0).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], (w, w), w, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(ks[5], (w, w), w, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7), (w, d), w, dtype),
+    }
+
+
+def rglru_specs(cfg):
+    return {"w_x": (None, "lru"), "w_gate": (None, "lru"),
+            "conv_w": (None, "lru"), "conv_b": ("lru",),
+            "w_a": (None, "lru"), "b_a": ("lru",),
+            "w_i": (None, "lru"), "b_i": ("lru",),
+            "lam": ("lru",), "w_out": ("lru", None)}
+
+
+def _conv(x, conv_w, conv_b, state=None):
+    W = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, i:i + x.shape[1]] * conv_w[i][None, None] for i in range(W))
+    return out + conv_b[None, None], full[:, -(W - 1):]
+
+
+def _gates(p, x):
+    """x (..., w) -> log_a (fp32), gated input b (fp32)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])          # ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def apply_rglru(p, cfg, u, h0=None, conv_state=None, return_state=False):
+    """u (B, S, d) -> (B, S, d)."""
+    x = u @ p["w_x"]
+    gate = jax.nn.gelu((u @ p["w_gate"]).astype(jnp.float32))
+    x, new_conv = _conv(x, p["conv_w"], p["conv_b"], conv_state)
+    x = constrain(x, ("batch", None, "act_lru"))
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the initial state into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = (h * gate).astype(u.dtype) @ p["w_out"]
+    if return_state:
+        return out, (h[:, -1], new_conv)
+    return out
+
+
+def rglru_cache_init(cfg, batch, dtype=jnp.float32):
+    w = _width(cfg)
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, 3, w), dtype)}
+
+
+def rglru_cache_specs(cfg):
+    return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
+
+
+def rglru_decode_step(p, cfg, u, cache):
+    """u (B, 1, d) -> (out (B,1,d), new cache)."""
+    x = u @ p["w_x"]
+    gate = jax.nn.gelu((u @ p["w_gate"]).astype(jnp.float32))
+    x, new_conv = _conv(x, p["conv_w"], p["conv_b"], cache["conv"])
+    a, b = _gates(p, x)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h[:, None] * gate).astype(u.dtype) @ p["w_out"]
+    return out, {"h": h, "conv": new_conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,303 @@
+"""Block composition + scan-over-layers stack.
+
+A config's layer sequence is ``block_pattern × n_groups + tail_pattern``.
+The repeated group is executed under ``lax.scan`` with stacked params
+(leading ``n_groups`` axis) and a configurable remat policy — this keeps the
+HLO small (compile time O(1) in depth) and bounds activation memory; the
+tail layers run unrolled.
+
+Block kinds: ``attn`` (GQA + MLP), ``local_attn`` (windowed), ``moe``
+(GQA + expert MLP), ``ssm`` (Mamba-2, single residual), ``rglru``
+(Griffin recurrent + MLP).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_init, mlp_specs, \
+    norm_init, norm_specs
+
+__all__ = ["block_init", "block_specs", "apply_block", "block_cache_init",
+           "block_cache_specs", "decode_block", "stack_init", "stack_specs",
+           "apply_stack", "stack_cache_init", "stack_cache_specs",
+           "decode_stack"]
+
+_ATTN_KINDS = ("attn", "local_attn", "moe")
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, kind, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": norm_init(cfg.d_model, cfg.norm_type, dtype)}
+    if kind in _ATTN_KINDS:
+        p["attn"] = attn_mod.attention_init(k1, cfg, dtype)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm_type, dtype)
+        p["ffn"] = (moe_mod.moe_init(k2, cfg, dtype) if kind == "moe"
+                    else mlp_init(k2, cfg, dtype))
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(k3, cfg, dtype)
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.rglru_init(k4, cfg, dtype)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm_type, dtype)
+        p["ffn"] = mlp_init(k2, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_specs(cfg, kind):
+    p = {"norm1": norm_specs(cfg.norm_type)}
+    if kind in _ATTN_KINDS:
+        p["attn"] = attn_mod.attention_specs(cfg)
+        p["norm2"] = norm_specs(cfg.norm_type)
+        p["ffn"] = moe_mod.moe_specs(cfg) if kind == "moe" else mlp_specs(cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_specs(cfg)
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.rglru_specs(cfg)
+        p["norm2"] = norm_specs(cfg.norm_type)
+        p["ffn"] = mlp_specs(cfg)
+    return p
+
+
+def _res(cfg, x):
+    return constrain(x, ("batch", "act_seq", None))
+
+
+def apply_block(p, cfg, kind, x, positions, cache=None):
+    """Training/prefill forward.  Returns (x, cache_or_None)."""
+    window = cfg.local_window if kind == "local_attn" else 0
+    new_cache = None
+    if kind in _ATTN_KINDS:
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        if cache is not None:
+            a, new_cache = attn_mod.prefill_into_cache(
+                p["attn"], cfg, h, positions, cache, window)
+        else:
+            a, _ = attn_mod.attend(p["attn"], cfg, h, positions, window)
+        x = _res(cfg, x + a)
+        h = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        f = (moe_mod.apply_moe(p["ffn"], cfg, h) if kind == "moe"
+             else apply_mlp(p["ffn"], cfg, h))
+        x = _res(cfg, x + f)
+    elif kind == "ssm":
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        if cache is not None:
+            s, (hT, conv) = ssm_mod.apply_ssm(p["ssm"], cfg, h, return_state=True)
+            new_cache = {"h": hT, "conv": conv.astype(cache["conv"].dtype)}
+        else:
+            s = ssm_mod.apply_ssm(p["ssm"], cfg, h)
+        x = _res(cfg, x + s)
+    elif kind == "rglru":
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        if cache is not None:
+            r, (hT, conv) = rglru_mod.apply_rglru(p["rec"], cfg, h, return_state=True)
+            new_cache = {"h": hT, "conv": conv.astype(cache["conv"].dtype)}
+        else:
+            r = rglru_mod.apply_rglru(p["rec"], cfg, h)
+        x = _res(cfg, x + r)
+        h = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        x = _res(cfg, x + apply_mlp(p["ffn"], cfg, h))
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+def block_cache_init(cfg, kind, batch, cache_len, dtype=jnp.bfloat16):
+    if kind == "attn" or kind == "moe":
+        return attn_mod.init_cache(cfg, batch, cache_len, 0, dtype)
+    if kind == "local_attn":
+        return attn_mod.init_cache(cfg, batch, cache_len, cfg.local_window, dtype)
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_init(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_mod.rglru_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_cache_specs(cfg, kind):
+    if kind in ("attn", "moe"):
+        return attn_mod.cache_specs(0)
+    if kind == "local_attn":
+        return attn_mod.cache_specs(cfg.local_window)
+    if kind == "ssm":
+        return ssm_mod.ssm_cache_specs(cfg)
+    if kind == "rglru":
+        return rglru_mod.rglru_cache_specs(cfg)
+    raise ValueError(kind)
+
+
+def decode_block(p, cfg, kind, x, cache, pos):
+    """One-token decode.  x (B, 1, d); returns (x, new_cache)."""
+    window = cfg.local_window if kind == "local_attn" else 0
+    if kind in _ATTN_KINDS:
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        a, cache = attn_mod.decode_step(p["attn"], cfg, h, cache, pos, window)
+        x = x + a
+        h = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        f = (moe_mod.apply_moe(p["ffn"], cfg, h) if kind == "moe"
+             else apply_mlp(p["ffn"], cfg, h))
+        x = x + f
+    elif kind == "ssm":
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        s, cache = ssm_mod.ssm_decode_step(p["ssm"], cfg, h, cache)
+        x = x + s
+    elif kind == "rglru":
+        h = apply_norm(p["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        r, cache = rglru_mod.rglru_decode_step(p["rec"], cfg, h, cache)
+        x = x + r
+        h = apply_norm(p["norm2"], x, cfg.norm_type, cfg.norm_eps)
+        x = x + apply_mlp(p["ffn"], cfg, h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# stacked layers: scanned groups + unrolled tail
+# ---------------------------------------------------------------------------
+
+def _group_init(key, cfg, dtype):
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}_{kind}": block_init(ks[i], cfg, kind, dtype)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def stack_init(key, cfg, dtype):
+    kg, kt = jax.random.split(key)
+    groups = [
+        _group_init(jax.random.fold_in(kg, g), cfg, dtype)
+        for g in range(cfg.n_groups)
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *groups) \
+        if cfg.n_groups > 1 else jax.tree.map(lambda x: x[None], groups[0])
+    tail = [block_init(jax.random.fold_in(kt, i), cfg, kind, dtype)
+            for i, kind in enumerate(cfg.tail_pattern)]
+    return {"groups": stacked, "tail": tail}
+
+
+def stack_specs(cfg):
+    group = {f"b{i}_{kind}": block_specs(cfg, kind)
+             for i, kind in enumerate(cfg.block_pattern)}
+    # leading layer axis is unsharded
+    group = jax.tree.map(lambda spec: (None,) + tuple(spec), group,
+                         is_leaf=lambda s: isinstance(s, tuple))
+    tail = [block_specs(cfg, kind) for kind in cfg.tail_pattern]
+    return {"groups": group, "tail": tail}
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(params, cfg, x, positions, caches=None):
+    """Forward through all layers.  With ``caches`` (prefill) the per-layer
+    caches are threaded and returned updated."""
+    with_cache = caches is not None
+
+    def group_fn(x, inp):
+        gp, gcache = inp
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"b{i}_{kind}"
+            c = gcache[key] if with_cache else None
+            x, nc = apply_block(gp[key], cfg, kind, x, positions, c)
+            new_caches[key] = nc
+        return x, (new_caches if with_cache else None)
+
+    body = _remat(cfg, group_fn)
+    if not cfg.scan_layers:
+        # unrolled path: used by the roofline analysis compiles (XLA cost
+        # analysis counts a scan body once — see EXPERIMENTS.md §Method)
+        new_group_list = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            gc = jax.tree.map(lambda a: a[g], caches["groups"]) if with_cache else None
+            x, nc = body(x, (gp, gc))
+            new_group_list.append(nc)
+        new_group_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_group_list)
+                            if with_cache else None)
+    elif with_cache:
+        x, new_group_caches = jax.lax.scan(
+            body, x, (params["groups"], caches["groups"]))
+    else:
+        x, _ = jax.lax.scan(lambda c, gp: body(c, (gp, None)), x, params["groups"])
+        new_group_caches = None
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_pattern):
+        c = caches["tail"][i] if with_cache else None
+        x, nc = apply_block(params["tail"][i], cfg, kind, x, positions, c)
+        new_tail.append(nc)
+    if with_cache:
+        return x, {"groups": new_group_caches, "tail": new_tail}
+    return x, None
+
+
+def stack_cache_init(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    def group_cache(g):
+        return {f"b{i}_{kind}": block_cache_init(cfg, kind, batch, cache_len, dtype)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    groups = [group_cache(g) for g in range(cfg.n_groups)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *groups) \
+        if cfg.n_groups > 1 else jax.tree.map(lambda x: x[None], groups[0])
+    tail = [block_cache_init(cfg, kind, batch, cache_len, dtype)
+            for kind in cfg.tail_pattern]
+    return {"groups": stacked, "tail": tail}
+
+
+def stack_cache_specs(cfg):
+    group = {f"b{i}_{kind}": block_cache_specs(cfg, kind)
+             for i, kind in enumerate(cfg.block_pattern)}
+    group = jax.tree.map(lambda spec: (None,) + tuple(spec), group,
+                         is_leaf=lambda s: isinstance(s, tuple))
+    tail = [block_cache_specs(cfg, kind) for kind in cfg.tail_pattern]
+    return {"groups": group, "tail": tail}
+
+
+def decode_stack(params, cfg, x, caches, pos):
+    def group_fn(x, inp):
+        gp, gcache = inp
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"b{i}_{kind}"
+            x, nc = decode_block(gp[key], cfg, kind, x, gcache[key], pos)
+            new_caches[key] = nc
+        return x, new_caches
+
+    if not cfg.scan_layers:
+        new_group_list = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            gc = jax.tree.map(lambda a: a[g], caches["groups"])
+            x, nc = group_fn(x, (gp, gc))
+            new_group_list.append(nc)
+        new_group_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_group_list)
+        new_tail = []
+        for i, kind in enumerate(cfg.tail_pattern):
+            x, nc = decode_block(params["tail"][i], cfg, kind, x,
+                                 caches["tail"][i], pos)
+            new_tail.append(nc)
+        return x, {"groups": new_group_caches, "tail": new_tail}
+    x, new_group_caches = jax.lax.scan(group_fn, x,
+                                       (params["groups"], caches["groups"]))
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_pattern):
+        x, nc = decode_block(params["tail"][i], cfg, kind, x, caches["tail"][i], pos)
+        new_tail.append(nc)
+    return x, {"groups": new_group_caches, "tail": new_tail}

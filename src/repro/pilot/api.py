@@ -1,0 +1,284 @@
+"""The Pilot-API: unified resource management across HPC, cloud, serverless
+and TPU meshes (paper §III).
+
+Two entities (paper): *pilot-job* — a user-defined set of resources — and
+*compute-unit* — a self-contained task, the key abstraction for expressing
+the application workload.  Resources are requested with a
+``PilotDescription``; once a ``Pilot`` is running, ``ComputeUnit``s are
+submitted to it.  The description is *normative*: the same attributes
+(``number_of_nodes``, ``cores_per_node``, ``memory_mb``, ``concurrency``,
+``partitions``) configure every backend; backend-specific details live in
+``attrs`` (mirroring the paper's Lambda layers / memory-limit passthrough).
+
+Backends are plugins keyed by the URL scheme of ``PilotDescription.resource``:
+
+    local://            in-process thread pool (real execution, wall clock)
+    serverless://       AWS Lambda + Kinesis mechanism simulation (virtual clock)
+    hpc://<machine>     Kafka + Dask on HPC mechanism simulation (virtual clock)
+    jax://mesh          mesh-slice resource containers over jax devices
+
+This mirrors the paper's plugin architecture (Fig 2): the Pilot-Manager
+offers one API; plugins encapsulate platform detail.
+"""
+
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+__all__ = [
+    "State",
+    "TaskProfile",
+    "PilotDescription",
+    "ComputeUnitDescription",
+    "ComputeUnit",
+    "Pilot",
+    "PilotComputeService",
+    "register_backend",
+]
+
+
+class State(enum.Enum):
+    NEW = "new"
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELED = "canceled"
+
+    @property
+    def is_final(self) -> bool:
+        return self in (State.DONE, State.FAILED, State.CANCELED)
+
+
+@dataclass(frozen=True)
+class TaskProfile:
+    """Mechanism-level cost profile of a compute-unit (used by the simulated
+    backends to derive service times; ignored by real-execution backends).
+
+    flops           embarrassingly-parallel floating-point ops (e.g. the
+                    K-Means distance phase)
+    serial_flops    work on the *shared model* (read-modify-write: partial-fit
+                    merge + serialization).  Backends with a consistent shared
+                    store (HPC/Lustre) execute this under a global lock — the
+                    paper's sigma; isolated backends (Lambda/S3, last-writer-
+                    wins) run it lock-free inside the container.
+    read_bytes      bytes read from shared state (model download, S3 GET)
+    write_bytes     bytes written to shared state (model upload, S3 PUT)
+    msg_bytes       size of the triggering message (broker → worker transfer)
+    coherence_peers if > 0, the task synchronizes with that many peers
+                    (e.g. reads each peer's model delta) — the paper's
+                    all-to-all model-parameter sharing
+    memory_mb       working-set size; must fit the container
+    """
+
+    flops: float = 0.0
+    serial_flops: float = 0.0
+    read_bytes: float = 0.0
+    write_bytes: float = 0.0
+    msg_bytes: float = 0.0
+    coherence_peers: int = 0
+    memory_mb: float = 64.0
+
+
+@dataclass
+class PilotDescription:
+    """Normative resource request (paper Table/Fig 2: one attribute set for
+    Kinesis shards and Kafka partitions alike)."""
+
+    resource: str = "local://"
+    number_of_nodes: int = 1
+    cores_per_node: int = 1
+    memory_mb: int = 3008          # per container (Lambda) / per worker
+    concurrency: int | None = None # max simultaneous containers/tasks
+    walltime_s: float = 900.0      # serverless hard limit: 15 min
+    partitions: int = 1            # broker shards / processing partitions
+    attrs: dict = field(default_factory=dict)
+
+    @property
+    def scheme(self) -> str:
+        return self.resource.split("://", 1)[0]
+
+
+@dataclass
+class ComputeUnitDescription:
+    """A self-contained task: a real callable and/or a cost profile."""
+
+    func: Callable[..., Any] | None = None
+    args: tuple = ()
+    kwargs: dict = field(default_factory=dict)
+    profile: TaskProfile | None = None
+    name: str = "cu"
+    run_id: str | None = None
+    partition: int | None = None   # streaming mode: broker partition binding
+
+
+class ComputeUnit:
+    """Handle for a submitted task."""
+
+    def __init__(self, desc: ComputeUnitDescription, uid: int, pilot: "Pilot") -> None:
+        self.desc = desc
+        self.uid = uid
+        self.pilot = pilot
+        self.state = State.NEW
+        self.result_value: Any = None
+        self.exception: BaseException | None = None
+        self.submit_ts: float = 0.0
+        self.start_ts: float = 0.0
+        self.end_ts: float = 0.0
+        self._done = threading.Event()
+        self.callbacks: list = []   # fn(cu) invoked once, on any final state
+
+    def add_done_callback(self, fn) -> None:
+        if self.state.is_final:
+            fn(self)
+        else:
+            self.callbacks.append(fn)
+
+    def _fire_callbacks(self) -> None:
+        cbs, self.callbacks = self.callbacks, []
+        for fn in cbs:
+            fn(self)
+
+    # -- lifecycle (driven by the backend) ----------------------------------
+    def _set_running(self, ts: float) -> None:
+        self.state = State.RUNNING
+        self.start_ts = ts
+
+    def _set_done(self, ts: float, result: Any) -> None:
+        self.state = State.DONE
+        self.end_ts = ts
+        self.result_value = result
+        self._done.set()
+        self._fire_callbacks()
+
+    def _set_failed(self, ts: float, exc: BaseException) -> None:
+        self.state = State.FAILED
+        self.end_ts = ts
+        self.exception = exc
+        self._done.set()
+        self._fire_callbacks()
+
+    def _set_canceled(self, ts: float) -> None:
+        self.state = State.CANCELED
+        self.end_ts = ts
+        self._done.set()
+        self._fire_callbacks()
+
+    # -- user API ------------------------------------------------------------
+    def wait(self, timeout: float | None = None) -> "ComputeUnit":
+        self.pilot.backend.drive_until(lambda: self.state.is_final, timeout)
+        return self
+
+    def result(self, timeout: float | None = None) -> Any:
+        self.wait(timeout)
+        if self.state == State.FAILED:
+            raise self.exception  # noqa: raise original
+        if self.state == State.CANCELED:
+            raise RuntimeError(f"compute unit {self.uid} canceled")
+        return self.result_value
+
+    @property
+    def runtime(self) -> float:
+        return self.end_ts - self.start_ts
+
+    @property
+    def wait_time(self) -> float:
+        return self.start_ts - self.submit_ts
+
+
+class Pilot:
+    """A resource container on some backend."""
+
+    def __init__(self, desc: PilotDescription, backend: "Backend", uid: int) -> None:
+        self.desc = desc
+        self.backend = backend
+        self.uid = uid
+        self.state = State.PENDING
+        self._cu_uid = 0
+        self.compute_units: list[ComputeUnit] = []
+
+    def submit_compute_unit(self, desc: ComputeUnitDescription | None = None, **kw) -> ComputeUnit:
+        if desc is None:
+            desc = ComputeUnitDescription(**kw)
+        if self.state.is_final:
+            raise RuntimeError(f"pilot {self.uid} is {self.state}")
+        cu = ComputeUnit(desc, self._cu_uid, self)
+        self._cu_uid += 1
+        self.compute_units.append(cu)
+        self.backend.submit(self, cu)
+        return cu
+
+    def wait_all(self, timeout: float | None = None) -> None:
+        self.backend.drive_until(
+            lambda: all(cu.state.is_final for cu in self.compute_units), timeout)
+
+    def cancel(self) -> None:
+        self.backend.cancel_pilot(self)
+        self.state = State.CANCELED
+
+
+class Backend:
+    """Backend plugin interface."""
+
+    scheme = "abstract"
+
+    def start_pilot(self, pilot: Pilot) -> None:
+        raise NotImplementedError
+
+    def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
+        raise NotImplementedError
+
+    def cancel_pilot(self, pilot: Pilot) -> None:
+        pass
+
+    def drive_until(self, predicate: Callable[[], bool], timeout: float | None) -> None:
+        """Advance execution until ``predicate`` holds.  Simulated backends
+        step their event queue; real backends block on conditions."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+_BACKENDS: dict[str, Callable[..., Backend]] = {}
+
+
+def register_backend(scheme: str, factory: Callable[..., Backend]) -> None:
+    _BACKENDS[scheme] = factory
+
+
+class PilotComputeService:
+    """Entry point (the paper's Pilot-Manager): routes PilotDescriptions to
+    backend plugins and tracks live pilots."""
+
+    def __init__(self, **backend_kwargs) -> None:
+        self._pilot_uid = 0
+        self.pilots: list[Pilot] = []
+        self._backends: dict[str, Backend] = {}
+        self._backend_kwargs = backend_kwargs
+
+    def _backend(self, scheme: str) -> Backend:
+        if scheme not in self._backends:
+            if scheme not in _BACKENDS:
+                # late registration: import built-in plugins on demand
+                from repro.pilot import backends as _b  # noqa: F401
+            if scheme not in _BACKENDS:
+                raise ValueError(f"no backend registered for scheme '{scheme}'; "
+                                 f"known: {sorted(_BACKENDS)}")
+            self._backends[scheme] = _BACKENDS[scheme](**self._backend_kwargs)
+        return self._backends[scheme]
+
+    def submit_pilot(self, desc: PilotDescription) -> Pilot:
+        backend = self._backend(desc.scheme)
+        pilot = Pilot(desc, backend, self._pilot_uid)
+        self._pilot_uid += 1
+        backend.start_pilot(pilot)
+        self.pilots.append(pilot)
+        return pilot
+
+    def close(self) -> None:
+        for b in self._backends.values():
+            b.close()

@@ -1,0 +1,7 @@
+# Importing this package registers all built-in backend plugins.
+from repro.pilot.backends.local import LocalBackend
+from repro.pilot.backends.serverless import ServerlessSimBackend
+from repro.pilot.backends.hpcsim import HpcSimBackend
+from repro.pilot.backends.jaxmesh import JaxMeshBackend
+
+__all__ = ["LocalBackend", "ServerlessSimBackend", "HpcSimBackend", "JaxMeshBackend"]

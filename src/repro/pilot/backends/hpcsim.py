@@ -1,0 +1,233 @@
+"""HPC (Kafka + Dask on Wrangler / Stampede2) mechanism simulation backend.
+
+Reproduces, on a virtual clock, the mechanisms the paper identifies as the
+cause of HPC streaming-scalability limits (§IV-C):
+
+* **Shared filesystem (Lustre)** — data production, brokering *and*
+  processing all use the shared filesystem.  Modeled as a processor-sharing
+  resource: aggregate bandwidth split across all concurrent flows.  More
+  partitions → more concurrent flows → per-flow bandwidth drops → the
+  *contention* (sigma) the USL fit recovers.
+* **Coherence** — the K-Means model is shared across tasks via the shared
+  filesystem; each task reads every peer's model delta, so coherence traffic
+  grows with (N-1) per task — N(N-1) system-wide — *and* rides the shared
+  medium.  This is the kappa term ("synchronization of the model updates via
+  the shared filesystem").
+* **Serial scheduler** — Dask's single scheduler dispatches tasks serially;
+  a fixed per-task dispatch cost bounds the parallel fraction.
+* **Faster cores, better absolute performance** — HPC cores beat a Lambda
+  vCPU slice; the paper's "HPC provides better absolute performance" at
+  small N comes from this, while degradation at larger N comes from the
+  shared resources above.
+
+Machines (paper §IV-B): wrangler = 48 cores/128 GB nodes; stampede2 = 68-core
+KNL/96 GB (slower per-core).  Select via resource URL ``hpc://wrangler-sim``.
+
+The backend also supports **failure injection** (``kill_worker``) used by the
+fault-tolerance tests: the running task fails, the worker leaves the pool,
+and the streaming engine re-dispatches.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.pilot.api import Backend, ComputeUnit, Pilot, State, TaskProfile, register_backend
+from repro.sim.des import SharedResource, SimLock, Simulator
+
+MACHINES = {
+    "wrangler": dict(cores_per_node=48, mem_per_node_gb=128, flops_per_core=5.2e9,
+                     fs_bw=950e6),
+    "stampede2": dict(cores_per_node=68, mem_per_node_gb=96, flops_per_core=2.6e9,
+                      fs_bw=1200e6),
+}
+
+DEFAULTS = dict(
+    dispatch_s=0.0015,      # serial Dask scheduler cost per task
+    coherence_delta_frac=1.0,   # peers' full model deltas are read back
+    fs_meta_latency=0.008,  # Lustre metadata/open cost per peer file
+    jitter_cv=0.08,         # shared-environment noise
+    net_bw=1.1e9,           # node NIC, bytes/s (per flow, before FS sharing)
+)
+
+
+@dataclass
+class _Worker:
+    wid: int
+    busy: bool = False
+    alive: bool = True
+    queue: deque = field(default_factory=deque)
+
+
+class HpcSimBackend(Backend):
+    scheme = "hpc"
+
+    def __init__(self, sim: Simulator | None = None, seed: int = 0, **_kw) -> None:
+        self.sim = sim or Simulator(seed=seed)
+        self._pilots: dict[int, dict] = {}
+
+    def start_pilot(self, pilot: Pilot) -> None:
+        machine = pilot.desc.resource.split("://", 1)[1].replace("-sim", "") or "wrangler"
+        if machine not in MACHINES:
+            raise ValueError(f"unknown HPC machine '{machine}'; known: {sorted(MACHINES)}")
+        cfg = dict(DEFAULTS)
+        cfg.update(MACHINES[machine])
+        cfg.update(pilot.desc.attrs)
+        n_workers = pilot.desc.partitions
+        self._pilots[pilot.uid] = {
+            "cfg": cfg,
+            "machine": machine,
+            "workers": [_Worker(i) for i in range(max(1, n_workers))],
+            "fs": SharedResource(self.sim, cfg["fs_bw"], name="lustre"),
+            "model_lock": SimLock(self.sim, name="model"),
+            "sched_queue": deque(),
+            "sched_busy": False,
+            "rr": 0,
+        }
+        pilot.state = State.RUNNING
+
+    def cancel_pilot(self, pilot: Pilot) -> None:
+        st = self._pilots.get(pilot.uid)
+        if st:
+            st["sched_queue"].clear()
+            for w in st["workers"]:
+                w.queue.clear()
+        for cu in pilot.compute_units:
+            if not cu.state.is_final:
+                cu._set_canceled(self.sim.now)
+
+    # -- failure injection ------------------------------------------------
+    def kill_worker(self, pilot: Pilot, wid: int) -> list[ComputeUnit]:
+        """Simulate a node failure: fail the running CU, drop queued ones."""
+        st = self._pilots[pilot.uid]
+        w = st["workers"][wid]
+        w.alive = False
+        orphans = []
+        for cu in pilot.compute_units:
+            if getattr(cu, "attrs", {}).get("worker") == wid and not cu.state.is_final:
+                cu._set_failed(self.sim.now, ConnectionError(f"worker {wid} died"))
+                orphans.append(cu)
+        orphans.extend(w.queue)
+        for cu in list(w.queue):
+            if not cu.state.is_final:
+                cu._set_failed(self.sim.now, ConnectionError(f"worker {wid} died (queued)"))
+        w.queue.clear()
+        return orphans
+
+    # -- scheduling: serial dispatcher --------------------------------------
+    def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
+        cu.submit_ts = self.sim.now
+        cu.state = State.PENDING
+        st = self._pilots[pilot.uid]
+        st["sched_queue"].append(cu)
+        self._pump_scheduler(pilot)
+
+    def _pump_scheduler(self, pilot: Pilot) -> None:
+        st = self._pilots[pilot.uid]
+        if st["sched_busy"] or not st["sched_queue"]:
+            return
+        st["sched_busy"] = True
+        cu = st["sched_queue"].popleft()
+
+        def dispatched() -> None:
+            st["sched_busy"] = False
+            if not cu.state.is_final:
+                self._assign(pilot, cu)
+            self._pump_scheduler(pilot)
+
+        self.sim.schedule(st["cfg"]["dispatch_s"], dispatched)
+
+    def _assign(self, pilot: Pilot, cu: ComputeUnit) -> None:
+        st = self._pilots[pilot.uid]
+        alive = [w for w in st["workers"] if w.alive]
+        if not alive:
+            cu._set_failed(self.sim.now, ConnectionError("no alive workers"))
+            return
+        if cu.desc.partition is not None:
+            w = st["workers"][cu.desc.partition % len(st["workers"])]
+            if not w.alive:
+                cu._set_failed(self.sim.now, ConnectionError(
+                    f"worker {w.wid} for partition {cu.desc.partition} is dead"))
+                return
+        else:
+            w = min(alive, key=lambda w: (len(w.queue) + (1 if w.busy else 0), w.wid))
+        w.queue.append(cu)
+        self._pump_worker(pilot, w)
+
+    # -- worker execution: compute + shared-FS I/O + coherence -----------------
+    def _pump_worker(self, pilot: Pilot, w: _Worker) -> None:
+        if w.busy or not w.queue or not w.alive:
+            return
+        cu = w.queue.popleft()
+        if cu.state.is_final:
+            self._pump_worker(pilot, w)
+            return
+        st = self._pilots[pilot.uid]
+        cfg = st["cfg"]
+        w.busy = True
+        cu._set_running(self.sim.now)
+        cu.attrs = {"worker": w.wid}
+        p = cu.desc.profile or TaskProfile()
+
+        # phase 1: pull message from the broker log (shared FS resident) and
+        #          read the current model from the shared FS
+        # phase 2: parallel compute — the distance phase (private cores)
+        # phase 3: model read-modify-write CRITICAL SECTION on the shared
+        #          model file: acquire the global lock, read every peer's
+        #          delta (coherence — metadata + bytes, both on the shared
+        #          FS), merge (serial_flops), write back, release.
+        #          Constant lock-hold → sigma; (N-1)-growing hold → kappa.
+        n_peers = p.coherence_peers
+        fs: SharedResource = st["fs"]
+        lock: SimLock = st["model_lock"]
+        coher_bytes = n_peers * max(p.write_bytes, 1.0) * cfg["coherence_delta_frac"]
+
+        def phase_compute() -> None:
+            t = p.flops / cfg["flops_per_core"]
+            t = self.sim.lognormal_jitter(t, cfg["jitter_cv"])
+            self.sim.schedule(t, phase_model_update)
+
+        def phase_model_update() -> None:
+            lock.acquire(in_critical_section)
+
+        def in_critical_section() -> None:
+            meta = n_peers * cfg["fs_meta_latency"]
+            merge = p.serial_flops / cfg["flops_per_core"]
+            hold = self.sim.lognormal_jitter(meta + merge, cfg["jitter_cv"])
+
+            def do_io() -> None:
+                fs.submit(p.write_bytes + coher_bytes, unlock)
+
+            self.sim.schedule(hold, do_io)
+
+        def unlock() -> None:
+            lock.release()
+            finish()
+
+        def finish() -> None:
+            if not w.alive:
+                return  # kill_worker already failed the CU
+            w.busy = False
+            if not cu.state.is_final:
+                result = None
+                if cu.desc.func is not None:
+                    try:
+                        result = cu.desc.func(*cu.desc.args, **cu.desc.kwargs)
+                    except BaseException as exc:  # noqa: BLE001
+                        cu._set_failed(self.sim.now, exc)
+                        self._pump_worker(pilot, w)
+                        return
+                cu._set_done(self.sim.now, result)
+            self._pump_worker(pilot, w)
+
+        fs.submit(p.msg_bytes + p.read_bytes, phase_compute)
+
+    def drive_until(self, predicate, timeout) -> None:
+        self.sim.run_until(t=None if timeout is None else self.sim.now + timeout,
+                           predicate=predicate)
+        if not predicate():
+            raise TimeoutError("hpc sim drive_until exhausted events/timeout")
+
+
+register_backend("hpc", HpcSimBackend)

@@ -1,0 +1,69 @@
+"""Local backend: real in-process execution on a thread pool (wall clock).
+
+Used by the quickstart/serving examples and integration tests; it is the
+"cloud VM / login node" analogue — no simulation, callables actually run.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.pilot.api import Backend, ComputeUnit, Pilot, State, register_backend
+
+
+class LocalBackend(Backend):
+    scheme = "local"
+
+    def __init__(self, **_kw) -> None:
+        self._pools: dict[int, ThreadPoolExecutor] = {}
+        self._cv = threading.Condition()
+
+    def start_pilot(self, pilot: Pilot) -> None:
+        workers = pilot.desc.concurrency or (
+            pilot.desc.number_of_nodes * pilot.desc.cores_per_node)
+        self._pools[pilot.uid] = ThreadPoolExecutor(max_workers=max(1, workers))
+        pilot.state = State.RUNNING
+
+    def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
+        cu.submit_ts = time.perf_counter()
+        cu.state = State.PENDING
+        pool = self._pools[pilot.uid]
+
+        def run() -> None:
+            cu._set_running(time.perf_counter())
+            try:
+                out = cu.desc.func(*cu.desc.args, **cu.desc.kwargs) if cu.desc.func else None
+                cu._set_done(time.perf_counter(), out)
+            except BaseException as exc:  # noqa: BLE001 — report task failure
+                cu._set_failed(time.perf_counter(), exc)
+            with self._cv:
+                self._cv.notify_all()
+
+        pool.submit(run)
+
+    def cancel_pilot(self, pilot: Pilot) -> None:
+        pool = self._pools.pop(pilot.uid, None)
+        if pool is not None:
+            pool.shutdown(wait=False, cancel_futures=True)
+        now = time.perf_counter()
+        for cu in pilot.compute_units:
+            if not cu.state.is_final:
+                cu._set_canceled(now)
+
+    def drive_until(self, predicate, timeout) -> None:
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cv:
+            while not predicate():
+                remaining = None if deadline is None else deadline - time.perf_counter()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError("local backend drive_until timed out")
+                self._cv.wait(timeout=remaining if remaining is not None else 0.2)
+
+    def close(self) -> None:
+        for pool in self._pools.values():
+            pool.shutdown(wait=False, cancel_futures=True)
+
+
+register_backend("local", LocalBackend)

@@ -1,0 +1,3 @@
+from repro.sim.des import SharedResource, Simulator
+
+__all__ = ["Simulator", "SharedResource"]

@@ -1,0 +1,195 @@
+"""Discrete-event simulation core (virtual clock).
+
+The paper's experiments ran on AWS (Lambda/Kinesis) and XSEDE HPC machines
+(Wrangler, Stampede2) — hardware this container cannot reach.  Per DESIGN.md
+§2 we reproduce both platforms as *mechanism-level* simulations: backends
+model CPU shares, shared-filesystem bandwidth, coherence synchronization and
+cold starts; contention (sigma) and coherence (kappa) then *emerge* from the
+mechanisms and are recovered by the USL fit, keeping the validation
+non-circular.
+
+The simulator is a standard event-queue DES: entities schedule callbacks at
+virtual timestamps; ``run_until`` advances the clock.  Deterministic given a
+seed (all stochastic service-time jitter flows through ``self.rng``).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["Simulator", "SimProcessError"]
+
+
+class SimProcessError(RuntimeError):
+    """Raised inside a simulated task to signal failure (walltime kill, ...)."""
+
+
+@dataclass(order=True)
+class _Scheduled:
+    ts: float
+    seq: int
+    fn: Callable[[], None] = field(compare=False)
+    canceled: bool = field(default=False, compare=False)
+
+
+class Simulator:
+    """Minimal, deterministic discrete-event simulator."""
+
+    def __init__(self, seed: int = 0) -> None:
+        self._queue: list[_Scheduled] = []
+        self._seq = itertools.count()
+        self.now: float = 0.0
+        self.rng = np.random.default_rng(seed)
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> _Scheduled:
+        """Schedule ``fn`` to run ``delay`` seconds from now."""
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        ev = _Scheduled(self.now + delay, next(self._seq), fn)
+        heapq.heappush(self._queue, ev)
+        return ev
+
+    def cancel(self, ev: _Scheduled) -> None:
+        ev.canceled = True
+
+    def step(self) -> bool:
+        """Run the next event. Returns False when the queue is empty."""
+        while self._queue:
+            ev = heapq.heappop(self._queue)
+            if ev.canceled:
+                continue
+            self.now = ev.ts
+            ev.fn()
+            return True
+        return False
+
+    def run_until(self, t: float | None = None, predicate: Callable[[], bool] | None = None,
+                  max_events: int = 50_000_000) -> None:
+        """Advance until time ``t``, ``predicate()`` is true, or queue empty."""
+        for _ in range(max_events):
+            if predicate is not None and predicate():
+                return
+            if not self._queue:
+                return
+            if t is not None and self._queue[0].ts > t:
+                self.now = t
+                return
+            self.step()
+        raise RuntimeError("simulation exceeded max_events — runaway event loop?")
+
+    def run(self) -> None:
+        self.run_until()
+
+    # -- convenience: stochastic service times ------------------------------
+    def lognormal_jitter(self, mean: float, cv: float) -> float:
+        """Multiplicative lognormal jitter around ``mean`` with coefficient of
+        variation ``cv`` (cv=0 → deterministic)."""
+        if cv <= 0.0:
+            return mean
+        sigma2 = np.log1p(cv * cv)
+        mu = -0.5 * sigma2
+        return float(mean * self.rng.lognormal(mu, np.sqrt(sigma2)))
+
+
+class SimLock:
+    """FIFO mutex on the virtual clock.
+
+    Models the shared-model read-modify-write critical section the paper's
+    HPC runs serialize on ("synchronization of the model updates via the
+    shared filesystem"): one holder at a time, waiters queue.
+    """
+
+    def __init__(self, sim: Simulator, name: str = "lock") -> None:
+        self.sim = sim
+        self.name = name
+        self._held = False
+        self._waiters: list[Callable[[], None]] = []
+
+    def acquire(self, on_acquired: Callable[[], None]) -> None:
+        if not self._held:
+            self._held = True
+            self.sim.schedule(0.0, on_acquired)
+        else:
+            self._waiters.append(on_acquired)
+
+    def release(self) -> None:
+        if self._waiters:
+            nxt = self._waiters.pop(0)
+            self.sim.schedule(0.0, nxt)
+        else:
+            self._held = False
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._waiters)
+
+
+class SharedResource:
+    """Processor-sharing resource: ``capacity`` units/sec split evenly among
+    active flows.  Models a shared filesystem / network link.
+
+    Because flow completion times depend on future arrivals, we implement the
+    standard PS recompute-on-change algorithm: every arrival/departure
+    re-evaluates remaining work and reschedules the next completion.
+    """
+
+    def __init__(self, sim: Simulator, capacity: float, name: str = "res") -> None:
+        self.sim = sim
+        self.capacity = float(capacity)
+        self.name = name
+        self._flows: dict[int, dict[str, Any]] = {}
+        self._ids = itertools.count()
+        self._next_completion: _Scheduled | None = None
+
+    @property
+    def active_flows(self) -> int:
+        return len(self._flows)
+
+    def submit(self, work: float, on_done: Callable[[], None]) -> None:
+        """Submit ``work`` units (e.g. bytes); ``on_done`` fires at completion."""
+        if work <= 0:
+            self.sim.schedule(0.0, on_done)
+            return
+        self._advance_progress()
+        fid = next(self._ids)
+        self._flows[fid] = {"remaining": float(work), "on_done": on_done}
+        self._reschedule()
+
+    def _rate_per_flow(self) -> float:
+        n = len(self._flows)
+        return self.capacity / n if n else self.capacity
+
+    def _advance_progress(self) -> None:
+        """Account work done since the last event at the current share rate."""
+        now = self.sim.now
+        last = getattr(self, "_last_ts", now)
+        dt = now - last
+        if dt > 0 and self._flows:
+            rate = self._rate_per_flow()
+            for f in self._flows.values():
+                f["remaining"] -= rate * dt
+        self._last_ts = now
+
+    def _reschedule(self) -> None:
+        if self._next_completion is not None:
+            self.sim.cancel(self._next_completion)
+            self._next_completion = None
+        if not self._flows:
+            return
+        rate = self._rate_per_flow()
+        fid, f = min(self._flows.items(), key=lambda kv: kv[1]["remaining"])
+        delay = max(f["remaining"], 0.0) / rate
+        self._next_completion = self.sim.schedule(delay, lambda: self._complete(fid))
+
+    def _complete(self, fid: int) -> None:
+        self._advance_progress()
+        f = self._flows.pop(fid, None)
+        self._next_completion = None
+        self._reschedule()
+        if f is not None:
+            f["on_done"]()

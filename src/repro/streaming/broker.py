@@ -1,0 +1,121 @@
+"""Partitioned message broker — the Kafka/Kinesis abstraction.
+
+A broker is a set of topics; a topic is a fixed number of *partitions*
+(Kinesis: shards); a partition is an append-only offset-addressed log.
+Consumer groups track per-partition committed offsets; ``lag`` (appended but
+uncommitted messages) is the backpressure signal the producer's intelligent
+backoff consumes.
+
+The broker is a passive, clock-agnostic data structure so the same code
+backs the virtual-clock simulations and the real threaded engine; timing
+semantics (ingest bandwidth, append latency) are modeled by the caller
+(see ``streaming.producer``), matching the paper's normative
+Pilot-Description: "the number of topic shards for Kinesis and Kafka can be
+specified using the same attribute".
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+__all__ = ["Message", "Broker"]
+
+
+@dataclass(frozen=True)
+class Message:
+    topic: str
+    partition: int
+    offset: int
+    ts: float                  # broker append timestamp
+    key: Any
+    value: Any
+    run_id: str | None = None
+    msg_id: str | None = None
+    size_bytes: int = 0
+
+
+@dataclass
+class _Partition:
+    log: list = field(default_factory=list)
+
+
+class Broker:
+    def __init__(self) -> None:
+        self._topics: dict[str, list[_Partition]] = {}
+        self._commits: dict[tuple[str, str, int], int] = {}  # (group, topic, part) -> next offset
+        self._rr: dict[str, int] = {}
+        self._lock = threading.RLock()
+
+    # -- topic admin -------------------------------------------------------
+    def create_topic(self, name: str, partitions: int) -> None:
+        with self._lock:
+            if name in self._topics:
+                raise ValueError(f"topic '{name}' exists")
+            if partitions < 1:
+                raise ValueError("partitions must be >= 1")
+            self._topics[name] = [_Partition() for _ in range(partitions)]
+            self._rr[name] = 0
+
+    def num_partitions(self, topic: str) -> int:
+        return len(self._topics[topic])
+
+    def topics(self) -> list[str]:
+        return sorted(self._topics)
+
+    # -- produce ------------------------------------------------------------
+    def partition_for(self, topic: str, key: Any) -> int:
+        with self._lock:
+            n = len(self._topics[topic])
+            if key is None:
+                p = self._rr[topic] % n
+                self._rr[topic] += 1
+                return p
+            return hash(key) % n
+
+    def append(self, topic: str, value: Any, *, ts: float, key: Any = None,
+               partition: int | None = None, run_id: str | None = None,
+               msg_id: str | None = None, size_bytes: int = 0) -> Message:
+        with self._lock:
+            if partition is None:
+                partition = self.partition_for(topic, key)
+            part = self._topics[topic][partition]
+            msg = Message(topic, partition, len(part.log), ts, key, value,
+                          run_id, msg_id, size_bytes)
+            part.log.append(msg)
+            return msg
+
+    # -- consume --------------------------------------------------------------
+    def fetch(self, topic: str, partition: int, offset: int,
+              max_records: int = 64) -> list[Message]:
+        with self._lock:
+            log = self._topics[topic][partition].log
+            return log[offset:offset + max_records]
+
+    def end_offset(self, topic: str, partition: int) -> int:
+        with self._lock:
+            return len(self._topics[topic][partition].log)
+
+    def commit(self, group: str, topic: str, partition: int, offset: int) -> None:
+        """Commit ``offset`` = next offset to read (Kafka semantics)."""
+        with self._lock:
+            key = (group, topic, partition)
+            self._commits[key] = max(self._commits.get(key, 0), offset)
+
+    def committed(self, group: str, topic: str, partition: int) -> int:
+        with self._lock:
+            return self._commits.get((group, topic, partition), 0)
+
+    # -- backpressure signal ------------------------------------------------
+    def lag(self, group: str, topic: str) -> int:
+        """Total appended-but-uncommitted messages across partitions."""
+        with self._lock:
+            total = 0
+            for p in range(len(self._topics[topic])):
+                total += len(self._topics[topic][p].log) - self.committed(group, topic, p)
+            return total
+
+    def total_messages(self, topic: str) -> int:
+        with self._lock:
+            return sum(len(p.log) for p in self._topics[topic])

@@ -1,0 +1,278 @@
+"""Streaming processing engine: binds compute-units to broker partitions.
+
+The paper's usage mode (ii): "the invoking of compute tasks in response to
+incoming data events ... a task is then automatically spawned in response to
+an event".  Each partition is consumed in order; up to ``batch_max`` pending
+messages are micro-batched into one compute-unit (the Lambda/Kinesis batch
+semantics); the CU is submitted to the pilot, and its completion commits the
+partition offset.
+
+Fault tolerance (framework-level, beyond the paper's prose but required for
+scale):
+
+* **retry / re-dispatch** — a failed CU is re-submitted up to
+  ``max_retries`` times; after a worker-loss (``ConnectionError``) the retry
+  drops its partition pinning so any surviving worker can take it.
+* **straggler mitigation** — if a CU exceeds ``straggler_factor ×`` the
+  median observed runtime (with a floor), a duplicate CU is dispatched;
+  the first completion wins and commits, the loser is ignored.
+* **at-least-once** — offsets only advance on completion, so every message
+  is processed at least once; duplicate completions are idempotent on the
+  commit path.
+
+Two drivers share this logic:
+``SimStreamingEngine`` (virtual clock, event callbacks) powers the
+benchmarks; ``ThreadedStreamingEngine`` (wall clock) powers the real-compute
+examples on the local / jaxmesh backends.
+"""
+
+from __future__ import annotations
+
+import statistics
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.metrics import MetricRegistry
+from repro.pilot.api import ComputeUnitDescription, Pilot, State, TaskProfile
+from repro.sim.des import Simulator
+from repro.streaming.broker import Broker, Message
+
+__all__ = ["Workload", "SimStreamingEngine", "ThreadedStreamingEngine"]
+
+
+@dataclass
+class Workload:
+    """What to run per micro-batch of messages.
+
+    ``profile_for(msgs)`` → TaskProfile consumed by the simulated backends.
+    ``fn(msgs)`` optional real computation (executed by real backends, and by
+    sim backends at completion time for state effects).
+    """
+
+    profile_for: Callable[[list[Message]], TaskProfile] | None = None
+    fn: Callable[[list[Message]], Any] | None = None
+    name: str = "workload"
+
+
+@dataclass
+class _PartitionState:
+    next_offset: int = 0
+    inflight: bool = False
+    batch_done_key: tuple | None = None  # (offset_lo, offset_hi) guard
+    retries: int = 0
+
+
+class _EngineCore:
+    """Shared bookkeeping between sim and threaded drivers."""
+
+    def __init__(self, broker: Broker, topic: str, pilot: Pilot, workload: Workload,
+                 metrics: MetricRegistry, run_id: str, group: str = "engine",
+                 batch_max: int = 8, max_retries: int = 2) -> None:
+        self.broker = broker
+        self.topic = topic
+        self.pilot = pilot
+        self.workload = workload
+        self.metrics = metrics
+        self.run_id = run_id
+        self.group = group
+        self.batch_max = batch_max
+        self.max_retries = max_retries
+        self.n_partitions = broker.num_partitions(topic)
+        self.parts = [_PartitionState() for _ in range(self.n_partitions)]
+        self.completed_runtimes: list[float] = []
+        self.processed = 0
+        self.failed_batches = 0
+        self.duplicates = 0
+        self.retried = 0
+
+    def make_cu_desc(self, msgs: list[Message], partition: int | None) -> ComputeUnitDescription:
+        profile = self.workload.profile_for(msgs) if self.workload.profile_for else TaskProfile()
+        fn = (lambda: self.workload.fn(msgs)) if self.workload.fn else None
+        return ComputeUnitDescription(func=fn, profile=profile,
+                                      name=f"{self.workload.name}[p{partition}]",
+                                      run_id=self.run_id, partition=partition)
+
+    def on_batch_done(self, partition: int, msgs: list[Message], now: float) -> bool:
+        """Commit + metrics; returns False if another copy already won."""
+        ps = self.parts[partition]
+        key = (msgs[0].offset, msgs[-1].offset + 1)
+        if ps.batch_done_key == key:
+            self.duplicates += 1
+            return False
+        ps.batch_done_key = key
+        ps.next_offset = msgs[-1].offset + 1
+        self.broker.commit(self.group, self.topic, partition, ps.next_offset)
+        for m in msgs:
+            self.metrics.record(self.run_id, "engine", "complete", now,
+                                msg_id=m.msg_id, partition=partition)
+        self.processed += len(msgs)
+        return True
+
+    @property
+    def straggler_timeout(self) -> float:
+        if len(self.completed_runtimes) < 3:
+            return float("inf")
+        return max(4.0 * statistics.median(self.completed_runtimes), 1e-3)
+
+
+class SimStreamingEngine:
+    """Virtual-clock engine (event-driven, used by all benchmarks)."""
+
+    def __init__(self, sim: Simulator, broker: Broker, topic: str, pilot: Pilot,
+                 workload: Workload, metrics: MetricRegistry, run_id: str,
+                 *, group: str = "engine", batch_max: int = 8,
+                 poll_interval: float = 0.005, max_retries: int = 2,
+                 straggler_mitigation: bool = True,
+                 is_input_complete: Callable[[], bool] | None = None) -> None:
+        self.sim = sim
+        self.core = _EngineCore(broker, topic, pilot, workload, metrics, run_id,
+                                group=group, batch_max=batch_max, max_retries=max_retries)
+        self.poll_interval = poll_interval
+        self.straggler_mitigation = straggler_mitigation
+        self.is_input_complete = is_input_complete or (lambda: False)
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        for p in range(self.core.n_partitions):
+            self.sim.schedule(0.0, lambda p=p: self._poll(p))
+
+    @property
+    def finished(self) -> bool:
+        if not self.is_input_complete():
+            return False
+        return all(ps.next_offset >= self.core.broker.end_offset(self.core.topic, i)
+                   and not ps.inflight
+                   for i, ps in enumerate(self.core.parts))
+
+    def run_to_completion(self, max_virtual_s: float = 1e7) -> None:
+        self.sim.run_until(t=self.sim.now + max_virtual_s, predicate=lambda: self.finished)
+        if not self.finished:
+            raise TimeoutError("engine did not drain the topic in time")
+
+    # -- partition consumer loop ---------------------------------------------
+    def _poll(self, partition: int) -> None:
+        core = self.core
+        ps = core.parts[partition]
+        if ps.inflight:
+            return
+        msgs = core.broker.fetch(core.topic, partition, ps.next_offset, core.batch_max)
+        if not msgs:
+            if not self.finished:
+                self.sim.schedule(self.poll_interval, lambda: self._poll(partition))
+            return
+        ps.inflight = True
+        ps.retries = 0
+        self._dispatch(partition, msgs, pinned=True)
+
+    def _dispatch(self, partition: int, msgs: list[Message], pinned: bool) -> None:
+        core = self.core
+        desc = core.make_cu_desc(msgs, partition if pinned else None)
+        core.metrics.record(core.run_id, "engine", "dispatch", self.sim.now,
+                            partition=partition, batch=len(msgs))
+        cu = core.pilot.submit_compute_unit(desc)
+        cu.add_done_callback(lambda cu: self._on_final(partition, msgs, cu))
+        if self.straggler_mitigation:
+            timeout = core.straggler_timeout
+            if timeout != float("inf"):
+                self.sim.schedule(timeout, lambda: self._straggler_check(partition, msgs, cu))
+
+    def _straggler_check(self, partition: int, msgs: list[Message], cu) -> None:
+        core = self.core
+        ps = core.parts[partition]
+        key = (msgs[0].offset, msgs[-1].offset + 1)
+        if cu.state.is_final or ps.batch_done_key == key:
+            return
+        core.metrics.record(core.run_id, "engine", "straggler_dup", self.sim.now,
+                            partition=partition)
+        self._dispatch(partition, msgs, pinned=False)  # speculative duplicate
+
+    def _on_final(self, partition: int, msgs: list[Message], cu) -> None:
+        core = self.core
+        ps = core.parts[partition]
+        if cu.state == State.DONE:
+            if core.on_batch_done(partition, msgs, self.sim.now):
+                core.completed_runtimes.append(cu.runtime)
+                ps.inflight = False
+                self.sim.schedule(0.0, lambda: self._poll(partition))
+            return
+        # FAILED / CANCELED
+        key = (msgs[0].offset, msgs[-1].offset + 1)
+        if ps.batch_done_key == key:
+            return  # a duplicate already completed this batch
+        if ps.retries < core.max_retries:
+            ps.retries += 1
+            core.retried += 1
+            pinned = not isinstance(cu.exception, ConnectionError)
+            core.metrics.record(core.run_id, "engine", "retry", self.sim.now,
+                                partition=partition, attempt=ps.retries)
+            self._dispatch(partition, msgs, pinned=pinned)
+        else:
+            core.failed_batches += 1
+            core.metrics.record(core.run_id, "engine", "abandon", self.sim.now,
+                                partition=partition)
+            ps.batch_done_key = key
+            ps.next_offset = msgs[-1].offset + 1   # skip poison batch, keep draining
+            core.broker.commit(core.group, core.topic, partition, ps.next_offset)
+            ps.inflight = False
+            self.sim.schedule(0.0, lambda: self._poll(partition))
+
+
+class ThreadedStreamingEngine:
+    """Wall-clock engine: one consumer thread per partition, real compute."""
+
+    def __init__(self, broker: Broker, topic: str, pilot: Pilot, workload: Workload,
+                 metrics: MetricRegistry, run_id: str, *, group: str = "engine",
+                 batch_max: int = 8, poll_interval: float = 0.01,
+                 max_retries: int = 2) -> None:
+        self.core = _EngineCore(broker, topic, pilot, workload, metrics, run_id,
+                                group=group, batch_max=batch_max, max_retries=max_retries)
+        self.poll_interval = poll_interval
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    def start(self) -> None:
+        import time
+        for p in range(self.core.n_partitions):
+            t = threading.Thread(target=self._consume, args=(p, time), daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _consume(self, partition: int, time_mod) -> None:
+        core = self.core
+        ps = core.parts[partition]
+        while not self._stop.is_set():
+            msgs = core.broker.fetch(core.topic, partition, ps.next_offset, core.batch_max)
+            if not msgs:
+                time_mod.sleep(self.poll_interval)
+                continue
+            attempts = 0
+            while True:
+                cu = core.pilot.submit_compute_unit(core.make_cu_desc(msgs, partition))
+                try:
+                    cu.result()
+                    core.on_batch_done(partition, msgs, time_mod.perf_counter())
+                    core.completed_runtimes.append(cu.runtime)
+                    break
+                except Exception:  # noqa: BLE001 — retry loop
+                    attempts += 1
+                    core.retried += 1
+                    if attempts > core.max_retries:
+                        core.failed_batches += 1
+                        ps.next_offset = msgs[-1].offset + 1
+                        core.broker.commit(core.group, core.topic, partition, ps.next_offset)
+                        break
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=timeout)
+
+    def drain(self, n_expected: int, timeout: float = 60.0) -> None:
+        import time
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            if self.core.processed + self.core.failed_batches * self.core.batch_max >= n_expected:
+                return
+            time.sleep(self.poll_interval)
+        raise TimeoutError(f"drained {self.core.processed}/{n_expected} messages")

@@ -1,0 +1,98 @@
+"""AdamW with global-norm clipping; optimizer state is ZeRO-shardable.
+
+Pure-pytree implementation (no optax dependency): moments are fp32
+regardless of param dtype (bf16 params + fp32 moments), and the launcher
+assigns the moments a *ZeRO sharding* (an extra mesh axis on their largest
+unsharded dim) via ``distributed.sharding.zero_specs`` — GSPMD then inserts
+the reduce-scatter / all-gather around the update.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "OptState", "init_opt_state", "adamw_step",
+           "global_norm"]
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def init_opt_state(params) -> OptState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros32, params),
+                    nu=jax.tree.map(zeros32, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def lr_schedule(cfg: OptimizerConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2   # decay only matrices (norms/biases exempt)
+
+
+def adamw_step(params, grads, state: OptState, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        g32 = g.astype(jnp.float32) * clip
+        m_new = b1 * m + (1 - b1) * g32
+        n_new = b2 * n + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        nhat = n_new / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, n_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_n = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr,
+               "param_norm": global_norm(new_params)}
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu), metrics

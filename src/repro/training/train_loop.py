@@ -1,0 +1,62 @@
+"""Training step builder: loss + grad + AdamW, with gradient accumulation.
+
+``make_train_step(cfg, opt_cfg, n_microbatches)`` returns a pure
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+suitable for ``jax.jit`` with in/out shardings (see launch/).  With
+``n_microbatches > 1`` the global batch is split on its leading axis and
+gradients are averaged under ``lax.scan`` — activation memory scales with
+the microbatch, enabling the large train cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.training.optimizer import OptimizerConfig, adamw_step
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_batch(batch, n_micro):
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} not divisible by {n_micro} microbatches"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(reshape, batch)
+
+
+def make_train_step(cfg, opt_cfg: OptimizerConfig, n_microbatches: int = 1):
+    def loss(params, batch):
+        return M.loss_fn(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss_val, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            micro = _split_batch(batch, n_microbatches)
+
+            def accum(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss)(params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grad_sum), _ = jax.lax.scan(accum, (0.0, zeros), micro)
+            loss_val = loss_sum / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grad_sum)
+        new_params, new_opt, metrics = adamw_step(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss_val
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        return M.loss_fn(params, cfg, batch)
+
+    return eval_step

@@ -1,0 +1,228 @@
+"""Tests for broker, producer backoff, and the streaming engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.metrics import MetricRegistry, new_run_id
+from repro.pilot.api import PilotComputeService, PilotDescription, TaskProfile
+from repro.sim.des import Simulator
+from repro.streaming.broker import Broker
+from repro.streaming.engine import SimStreamingEngine, Workload
+from repro.streaming.producer import AIMD, SyntheticProducer
+
+
+# -- broker ---------------------------------------------------------------
+
+def test_broker_append_fetch_roundtrip():
+    b = Broker()
+    b.create_topic("t", 2)
+    m = b.append("t", {"x": 1}, ts=0.0, partition=1)
+    assert m.offset == 0 and m.partition == 1
+    got = b.fetch("t", 1, 0)
+    assert got == [m]
+    assert b.fetch("t", 0, 0) == []
+
+
+def test_broker_offsets_monotone_per_partition():
+    b = Broker()
+    b.create_topic("t", 3)
+    for i in range(30):
+        b.append("t", i, ts=float(i))
+    for p in range(3):
+        log = b.fetch("t", p, 0, 100)
+        assert [m.offset for m in log] == list(range(len(log)))
+
+
+def test_broker_key_routing_stable():
+    b = Broker()
+    b.create_topic("t", 4)
+    p1 = b.partition_for("t", "user-1")
+    assert all(b.partition_for("t", "user-1") == p1 for _ in range(5))
+
+
+def test_broker_commit_and_lag():
+    b = Broker()
+    b.create_topic("t", 1)
+    for i in range(10):
+        b.append("t", i, ts=0.0)
+    assert b.lag("g", "t") == 10
+    b.commit("g", "t", 0, 4)
+    assert b.lag("g", "t") == 6
+    b.commit("g", "t", 0, 2)  # commits never regress
+    assert b.committed("g", "t", 0) == 4
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 99)), max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_broker_property_total_conservation(ops):
+    """Every appended message is fetchable exactly once per offset range."""
+    b = Broker()
+    b.create_topic("t", 3)
+    appended = []
+    for part, val in ops:
+        m = b.append("t", val, ts=0.0, partition=part)
+        appended.append((part, m.offset, val))
+    total = 0
+    for p in range(3):
+        log = b.fetch("t", p, 0, 10_000)
+        assert [m.offset for m in log] == list(range(len(log)))
+        total += len(log)
+    assert total == len(appended)
+    for part, off, val in appended:
+        assert b.fetch("t", part, off, 1)[0].value == val
+
+
+# -- producer AIMD ------------------------------------------------------------
+
+def test_aimd_decreases_on_lag_increases_when_idle():
+    a = AIMD(rate_hz=100.0, hi_watermark=10, lo_watermark=2)
+    r1 = a.update(lag=50)
+    assert r1 < 100.0
+    r2 = a.update(lag=0)
+    assert r2 > r1
+
+
+def test_producer_reaches_max_sustained_throughput():
+    """With a processor that handles exactly 10 msg/s, AIMD converges there."""
+    sim = Simulator(seed=0)
+    broker = Broker()
+    broker.create_topic("t", 1)
+    metrics = MetricRegistry()
+    run_id = new_run_id("aimd")
+    prod = SyntheticProducer(sim, broker, "t",
+                             msg_factory=lambda i: (None, i, 100),
+                             n_messages=400, run_id=run_id, metrics=metrics,
+                             aimd=AIMD(rate_hz=1.0, hi_watermark=8, lo_watermark=2))
+    # consumer: drains 10 msg/s
+    state = {"next": 0}
+
+    def consume():
+        end = broker.end_offset("t", 0)
+        if state["next"] < end:
+            state["next"] += 1
+            broker.commit("engine", "t", 0, state["next"])
+            metrics.record(run_id, "engine", "complete", sim.now,
+                           msg_id=f"{run_id}/{state['next'] - 1}")
+        sim.schedule(0.1, consume)
+
+    sim.schedule(0.0, consume)
+    prod.start()
+    sim.run_until(predicate=lambda: state["next"] >= 350)
+    evs = sorted(e.ts for e in metrics.events(run_id=run_id, kind="complete"))
+    steady = evs[len(evs) // 2:]
+    rate = (len(steady) - 1) / (steady[-1] - steady[0])
+    assert rate == pytest.approx(10.0, rel=0.15)
+    # and the producer never runs unboundedly ahead (backpressure works)
+    assert broker.lag("engine", "t") <= 3 * 8
+
+
+# -- engine -------------------------------------------------------------------
+
+def build_pipeline(partitions=2, n_messages=20, machine="serverless://aws-sim",
+                   batch_max=2, profile=None, seed=0, **engine_kw):
+    pcs = PilotComputeService(seed=seed)
+    pilot = pcs.submit_pilot(PilotDescription(
+        resource=machine, memory_mb=3008, partitions=partitions,
+        concurrency=partitions))
+    sim = pilot.backend.sim
+    broker = Broker()
+    broker.create_topic("t", partitions)
+    metrics = MetricRegistry()
+    run_id = new_run_id("engine-test")
+    prof = profile or TaskProfile(flops=1e8)
+    wl = Workload(profile_for=lambda msgs: prof, name="test")
+    prod = SyntheticProducer(sim, broker, "t",
+                             msg_factory=lambda i: (None, {"i": i}, 1000),
+                             n_messages=n_messages, run_id=run_id, metrics=metrics)
+    eng = SimStreamingEngine(sim, broker, "t", pilot, wl, metrics, run_id,
+                             batch_max=batch_max,
+                             is_input_complete=lambda: prod.done, **engine_kw)
+    return sim, broker, metrics, run_id, prod, eng, pilot
+
+
+def test_engine_processes_everything_in_order():
+    sim, broker, metrics, run_id, prod, eng, pilot = build_pipeline(
+        partitions=2, n_messages=30)
+    prod.start()
+    eng.start()
+    eng.run_to_completion()
+    assert eng.core.processed == 30
+    for p in range(2):
+        assert broker.committed("engine", "t", p) == broker.end_offset("t", p)
+    # per-partition completion order == offset order (exactly-once commits)
+    assert eng.core.duplicates == 0
+
+
+def test_engine_latency_tracing():
+    sim, broker, metrics, run_id, prod, eng, pilot = build_pipeline(n_messages=10)
+    prod.start()
+    eng.start()
+    eng.run_to_completion()
+    lat = metrics.latencies(run_id, "append", "complete")
+    assert len(lat) == 10
+    assert np.all(lat > 0)
+
+
+def test_engine_retries_transient_failures():
+    """A worker dying mid-run triggers re-dispatch; all messages complete."""
+    sim, broker, metrics, run_id, prod, eng, pilot = build_pipeline(
+        machine="hpc://wrangler-sim", partitions=2, n_messages=16,
+        profile=TaskProfile(flops=3.6e9), batch_max=1)  # ~1s/task
+    prod.start()
+    eng.start()
+    backend = pilot.backend
+    # kill worker 0 after ~1s of virtual time
+    sim.schedule(1.0, lambda: backend.kill_worker(pilot, 0))
+    eng.run_to_completion()
+    assert eng.core.processed == 16
+    assert eng.core.retried >= 1
+    assert eng.core.failed_batches == 0
+
+
+def test_engine_straggler_duplicate_dispatch():
+    """One pathologically slow task gets a speculative duplicate."""
+    calls = {"n": 0}
+
+    def profile_for(msgs):
+        calls["n"] += 1
+        if calls["n"] == 8:            # one straggler: 500x slower
+            return TaskProfile(flops=5e10)
+        return TaskProfile(flops=1e8)
+
+    pcs = PilotComputeService(seed=0)
+    pilot = pcs.submit_pilot(PilotDescription(
+        resource="serverless://aws-sim", memory_mb=3008, partitions=2,
+        concurrency=4))
+    sim = pilot.backend.sim
+    broker = Broker()
+    broker.create_topic("t", 2)
+    metrics = MetricRegistry()
+    run_id = new_run_id("straggler")
+    wl = Workload(profile_for=profile_for, name="strag")
+    prod = SyntheticProducer(sim, broker, "t",
+                             msg_factory=lambda i: (None, {"i": i}, 1000),
+                             n_messages=20, run_id=run_id, metrics=metrics)
+    eng = SimStreamingEngine(sim, broker, "t", pilot, wl, metrics, run_id,
+                             batch_max=1, straggler_mitigation=True,
+                             is_input_complete=lambda: prod.done)
+    prod.start()
+    eng.start()
+    eng.run_to_completion()
+    assert eng.core.processed == 20
+    dups = metrics.events(run_id=run_id, kind="straggler_dup")
+    assert len(dups) >= 1
+
+
+def test_engine_poison_batch_abandoned_after_retries():
+    sim, broker, metrics, run_id, prod, eng, pilot = build_pipeline(
+        n_messages=6, batch_max=1,
+        profile=TaskProfile(flops=1e8, memory_mb=99999))  # always OOM
+    prod.start()
+    eng.start()
+    eng.run_to_completion()
+    assert eng.core.processed == 0
+    assert eng.core.failed_batches == 6
+    # engine still drained the topic (no deadlock)
+    assert broker.committed("engine", "t", 0) == broker.end_offset("t", 0)

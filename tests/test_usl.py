@@ -1,0 +1,102 @@
+"""Unit + property tests for the USL model (core of StreamInsight)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.usl import USLFit, fit_usl, r_squared, rmse, usl_throughput
+
+NS = np.array([1, 2, 4, 8, 16, 32, 64], dtype=np.float64)
+
+
+def test_usl_identity_at_n1():
+    assert usl_throughput(1.0, 0.3, 0.05, 7.0) == pytest.approx(7.0)
+
+
+def test_linear_scaling_when_coeffs_zero():
+    t = usl_throughput(NS, 0.0, 0.0, 2.0)
+    np.testing.assert_allclose(t, 2.0 * NS)
+
+
+def test_amdahl_special_case():
+    """kappa=0 reduces USL to Amdahl: T(N) = N / (1 + sigma (N-1))."""
+    sigma = 0.2
+    t = usl_throughput(NS, sigma, 0.0, 1.0)
+    amdahl = NS / (1 + sigma * (NS - 1))
+    np.testing.assert_allclose(t, amdahl)
+    # asymptote 1/sigma
+    assert usl_throughput(1e9, sigma, 0.0, 1.0) == pytest.approx(1 / sigma, rel=1e-5)
+
+
+def test_retrograde_peak_formula():
+    sigma, kappa = 0.1, 0.01
+    fit = USLFit(sigma=sigma, kappa=kappa, gamma=1.0, r2=1, rmse=0, n_obs=0)
+    n_star = fit.peak_n
+    assert n_star == pytest.approx(math.sqrt((1 - sigma) / kappa))
+    # T at peak >= T at peak +- 1
+    assert fit.predict(n_star) >= fit.predict(n_star + 1.0)
+    assert fit.predict(n_star) >= fit.predict(max(n_star - 1.0, 1.0))
+
+
+@given(sigma=st.floats(0.0, 0.9), kappa=st.floats(0.0, 0.05),
+       gamma=st.floats(0.1, 100.0))
+@settings(max_examples=60, deadline=None)
+def test_fit_recovers_exact_data(sigma, kappa, gamma):
+    t = usl_throughput(NS, sigma, kappa, gamma)
+    fit = fit_usl(NS, t)
+    pred = fit.predict(NS)
+    # parameters may trade off slightly, but the fitted curve must match
+    np.testing.assert_allclose(pred, t, rtol=5e-3, atol=1e-9)
+    assert fit.r2 > 0.999
+
+
+@given(sigma=st.floats(0.01, 0.8), kappa=st.floats(1e-5, 0.02))
+@settings(max_examples=30, deadline=None)
+def test_fit_parameter_recovery_clean(sigma, kappa):
+    t = usl_throughput(NS, sigma, kappa, 5.0)
+    fit = fit_usl(NS, t)
+    assert fit.sigma == pytest.approx(sigma, abs=2e-2)
+    assert fit.kappa == pytest.approx(kappa, abs=2e-3)
+
+
+def test_fit_robust_to_noise():
+    rng = np.random.default_rng(0)
+    t = usl_throughput(NS, 0.25, 0.005, 10.0) * rng.lognormal(0, 0.05, NS.shape)
+    fit = fit_usl(NS, t)
+    assert fit.r2 > 0.9
+    assert 0.1 < fit.sigma < 0.45
+    assert fit.kappa < 0.02
+
+
+def test_fit_fix_gamma():
+    t = usl_throughput(NS, 0.3, 0.002, 4.0)
+    fit = fit_usl(NS, t, fix_gamma=True)
+    assert fit.gamma == pytest.approx(4.0, rel=1e-6)
+    assert fit.sigma == pytest.approx(0.3, abs=1e-3)
+
+
+def test_fit_monotone_nondecreasing_prediction_before_peak():
+    t = usl_throughput(NS, 0.2, 0.01, 1.0)
+    fit = fit_usl(NS, t)
+    grid = np.linspace(1, fit.peak_n, 50)
+    pred = fit.predict(grid)
+    assert np.all(np.diff(pred) >= -1e-9)
+
+
+def test_fit_input_validation():
+    with pytest.raises(ValueError):
+        fit_usl([1.0], [1.0])
+    with pytest.raises(ValueError):
+        fit_usl([0.5, 2.0], [1.0, 1.0])
+    with pytest.raises(ValueError):
+        fit_usl([1.0, 2.0], [-1.0, 1.0])
+
+
+def test_r2_rmse_basics():
+    y = np.array([1.0, 2.0, 3.0])
+    assert r_squared(y, y) == 1.0
+    assert rmse(y, y) == 0.0
+    assert rmse(y, y + 1.0) == pytest.approx(1.0)
