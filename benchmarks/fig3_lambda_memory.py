@@ -9,18 +9,18 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.metrics import MetricRegistry
-from repro.core.miniapp import StreamExperiment, run_experiment
+from repro.core.miniapp import StreamExperiment
+from repro.core.streaminsight import run_cells
 
 MEMORIES = [512, 1024, 1536, 2048, 2560, 3008]
 
 
 def run(n_messages: int = 40) -> list[dict]:
+    cells = [StreamExperiment(
+        machine="serverless", partitions=2, points=8000, centroids=1024,
+        memory_mb=mem, n_messages=n_messages, seed=1) for mem in MEMORIES]
     rows = []
-    for mem in MEMORIES:
-        res = run_experiment(StreamExperiment(
-            machine="serverless", partitions=2, points=8000, centroids=1024,
-            memory_mb=mem, n_messages=n_messages, seed=1), MetricRegistry())
+    for mem, res in zip(MEMORIES, run_cells(cells, parallel=True)):
         rows.append({
             "memory_mb": mem,
             "task_p50_s": round(res.runtime_summary["p50"], 4),

@@ -11,8 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.metrics import MetricRegistry
-from repro.core.miniapp import StreamExperiment, run_experiment
+from repro.core.miniapp import StreamExperiment
+from repro.core.streaminsight import run_cells
 
 PARTITIONS = [1, 2, 4, 8, 16]
 POINTS = [8000, 16000, 26000]          # 296 / 592 / 962 KB messages
@@ -20,20 +20,19 @@ CENTROIDS = [128, 1024, 8192]
 
 
 def run(n_messages: int = 30) -> list[dict]:
+    cells = [StreamExperiment(
+        machine=machine, partitions=n, points=pts, centroids=c,
+        n_messages=n_messages, seed=2)
+        for machine in ["serverless", "wrangler"]
+        for pts in POINTS for c in CENTROIDS for n in PARTITIONS]
     rows = []
-    for machine in ["serverless", "wrangler"]:
-        for pts in POINTS:
-            for c in CENTROIDS:
-                for n in PARTITIONS:
-                    res = run_experiment(StreamExperiment(
-                        machine=machine, partitions=n, points=pts, centroids=c,
-                        n_messages=n_messages, seed=2), MetricRegistry())
-                    rows.append({
-                        "machine": machine, "partitions": n, "points": pts,
-                        "centroids": c,
-                        "latency_px_p50_s": round(res.latency_px["p50"], 4),
-                        "task_p50_s": round(res.runtime_summary["p50"], 4),
-                    })
+    for exp, res in zip(cells, run_cells(cells, parallel=True)):
+        rows.append({
+            "machine": exp.machine, "partitions": exp.partitions,
+            "points": exp.points, "centroids": exp.centroids,
+            "latency_px_p50_s": round(res.latency_px["p50"], 4),
+            "task_p50_s": round(res.runtime_summary["p50"], 4),
+        })
     return rows
 
 

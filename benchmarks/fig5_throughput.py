@@ -8,24 +8,27 @@ speedup at all.
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.metrics import MetricRegistry
-from repro.core.miniapp import StreamExperiment, run_experiment
+from repro.core.miniapp import StreamExperiment
+from repro.core.streaminsight import run_cells
 
 PARTITIONS = [1, 2, 4, 8, 16]
 CENTROIDS = [1024, 8192]
 
 
 def run(n_messages: int = 40) -> list[dict]:
+    cells = [StreamExperiment(
+        machine=machine, partitions=n, points=16000, centroids=c,
+        n_messages=n_messages, seed=3)
+        for machine in ["serverless", "wrangler"]
+        for c in CENTROIDS for n in PARTITIONS]
+    results = dict(zip(((e.machine, e.centroids, e.partitions) for e in cells),
+                       run_cells(cells, parallel=True)))
     rows = []
     for machine in ["serverless", "wrangler"]:
         for c in CENTROIDS:
-            base = None
+            base = results[(machine, c, PARTITIONS[0])].throughput
             for n in PARTITIONS:
-                res = run_experiment(StreamExperiment(
-                    machine=machine, partitions=n, points=16000, centroids=c,
-                    n_messages=n_messages, seed=3), MetricRegistry())
-                if base is None:
-                    base = res.throughput
+                res = results[(machine, c, n)]
                 rows.append({
                     "machine": machine, "partitions": n, "centroids": c,
                     "throughput": round(res.throughput, 3),

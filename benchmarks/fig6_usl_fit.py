@@ -17,11 +17,12 @@ def run(n_messages: int = 40) -> tuple[list[dict], list]:
     si = StreamInsight()
     si.run(ExperimentDesign(machines=["serverless", "wrangler"],
                             partitions=PARTITIONS, points=[16000],
-                            centroids=[1024, 8192], n_messages=n_messages))
+                            centroids=[1024, 8192], n_messages=n_messages),
+           parallel=True)
     models = si.fit_models()
     rows = []
     for m in models:
-        machine, pts, c, mem = m.key
+        machine, pts, c, mem, _policy, _bm = m.key
         rows.append({
             "machine": machine, "points": pts, "centroids": c,
             "sigma": round(m.fit.sigma, 4), "kappa": round(m.fit.kappa, 6),

@@ -17,7 +17,8 @@ def run(n_messages: int = 60) -> list[dict]:
     si = StreamInsight()
     si.run(ExperimentDesign(machines=["serverless", "wrangler"],
                             partitions=PARTITIONS, points=[16000],
-                            centroids=[1024], n_messages=n_messages))
+                            centroids=[1024], n_messages=n_messages),
+           parallel=True)
     rows = []
     for n_train in [2, 3, 4, 5, 6]:
         agg = si.evaluate(n_train, seed=7)

@@ -1,0 +1,91 @@
+"""Perf smoke: DES engine cost tracking across PRs.
+
+Runs the reference experiment cells (N=8 partitions, 200 messages — the
+cell the push-based-engine acceptance criterion is stated against) on both
+simulated platforms, plus a small parallel-vs-serial sweep, and writes
+``BENCH_engine.json`` at the repo root:
+
+* ``des_events`` — ``Simulator`` events consumed per cell.  The push-based
+  engine refactor took the serverless reference cell from 6,189 (seed,
+  polling engine) to ~1,000; a regression back toward poll-driven event
+  counts shows up here immediately.
+* ``wall_s`` — wall-clock per cell, and for the sweep serial vs parallel.
+
+    PYTHONPATH=src python -m benchmarks.perf_smoke
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core.miniapp import StreamExperiment, run_experiment
+from repro.core.streaminsight import run_cells
+
+# Seed (polling-engine) event counts for the reference cells, recorded
+# before the push-based refactor; the gate below enforces we never regress
+# to within 5x of them.
+SEED_EVENTS = {"serverless": 6189, "wrangler": 20889}
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+
+
+def reference_cell(machine: str) -> StreamExperiment:
+    return StreamExperiment(machine=machine, partitions=8, n_messages=200, seed=0)
+
+
+def run() -> dict:
+    report: dict = {"cells": {}, "sweep": {}}
+    for machine in ("serverless", "wrangler"):
+        t0 = time.perf_counter()
+        res = run_experiment(reference_cell(machine))
+        wall = time.perf_counter() - t0
+        report["cells"][machine] = {
+            "partitions": 8, "n_messages": 200,
+            "des_events": res.des_events,
+            "events_per_message": round(res.des_events / 200, 2),
+            "seed_des_events": SEED_EVENTS[machine],
+            "improvement_x": round(SEED_EVENTS[machine] / max(res.des_events, 1), 2),
+            "wall_s": round(wall, 3),
+            "throughput": round(res.throughput, 3),
+        }
+    # parallel runner smoke: a compute-heavy (fig4-style) sweep, serial vs
+    # pooled — light cells finish in milliseconds and would only measure
+    # pool overhead
+    sweep = [StreamExperiment(machine=m, partitions=n, centroids=8192,
+                              points=16000, n_messages=40, seed=3)
+             for m in ("serverless", "wrangler") for n in (1, 2, 4, 8, 12, 16)]
+    t0 = time.perf_counter()
+    serial = run_cells(sweep, parallel=False)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pooled = run_cells(sweep, parallel=True)
+    t_parallel = time.perf_counter() - t0
+    report["sweep"] = {
+        "cells": len(sweep),
+        "wall_serial_s": round(t_serial, 3),
+        "wall_parallel_s": round(t_parallel, 3),
+        "speedup_x": round(t_serial / max(t_parallel, 1e-9), 2),
+        "bit_identical": all(a.throughput == b.throughput
+                             for a, b in zip(serial, pooled)),
+    }
+    return report
+
+
+def main() -> None:
+    report = run()
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    for machine, cell in report["cells"].items():
+        assert cell["improvement_x"] >= 5.0, \
+            f"{machine}: DES event count regressed: {cell}"
+    assert report["sweep"]["bit_identical"], \
+        "parallel runner results diverged from serial"
+    print(f"perf_smoke: wrote {OUT_PATH.name}; "
+          + "; ".join(f"{m} {c['des_events']} events (x{c['improvement_x']} vs seed)"
+                      for m, c in report["cells"].items())
+          + f"; sweep parallel x{report['sweep']['speedup_x']}  [gates OK]")
+
+
+if __name__ == "__main__":
+    main()

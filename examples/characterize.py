@@ -1,11 +1,17 @@
-"""StreamInsight end-to-end: experimental design → automated runs → USL
-models → prediction quality → a concrete configuration recommendation.
+"""StreamInsight end-to-end: experimental design → automated runs (process
+pool) → USL models → prediction quality → a concrete configuration
+recommendation.
 
 Also demonstrates the beyond-paper finding: switching the HPC model-sharing
 consistency policy from ``full_fit_locked`` (what the paper's Dask numbers
 imply) to ``update_locked`` (stale-read distance phase outside the lock)
 moves sigma from ~0.9 to ~0.2 and the predicted optimal partition count from
 ~2 to >8 — StreamInsight quantifying an optimization before deploying it.
+The ablation uses ``policy`` as a first-class grid axis: one design, one
+parallel sweep, one model per policy scenario.
+
+The ``__main__`` guard is required: the parallel runner's workers are
+started with a non-fork context and re-import this module.
 
     PYTHONPATH=src python examples/characterize.py
 """
@@ -17,36 +23,44 @@ from repro.core.streaminsight import ExperimentDesign, StreamInsight
 
 PARTITIONS = [1, 2, 4, 8, 12, 16]
 
-print("=== running the experiment grid (virtual clock)")
-si = StreamInsight()
-si.run(ExperimentDesign(machines=["serverless", "wrangler"],
-                        partitions=PARTITIONS, points=[16000],
-                        centroids=[1024], n_messages=50), verbose=True)
-print()
-print(si.report())
 
-print("\n=== prediction quality vs training-set size (paper Fig 7)")
-for n_train in [2, 3, 4]:
-    agg = si.evaluate(n_train)
-    print(f"  {n_train} train configs -> mean rel-RMSE "
-          f"{agg['mean_rel_rmse'] * 100:.1f}%")
+def main() -> None:
+    print("=== running the experiment grid (virtual clock, process pool)")
+    si = StreamInsight()
+    si.run(ExperimentDesign(machines=["serverless", "wrangler"],
+                            partitions=PARTITIONS, points=[16000],
+                            centroids=[1024], n_messages=50), verbose=True,
+           parallel=True)
+    print()
+    print(si.report())
 
-print("\n=== recommendation per scenario")
-for m in si.fit_models():
-    scaler = Autoscaler(m.fit)
-    machine = m.key[0]
-    print(f"  {machine:>10}: run N={scaler.usable_peak_n()} partitions "
-          f"(peak {scaler.max_sustainable_rate():.2f} msg/s)")
+    print("\n=== prediction quality vs training-set size (paper Fig 7)")
+    for n_train in [2, 3, 4]:
+        agg = si.evaluate(n_train)
+        print(f"  {n_train} train configs -> mean rel-RMSE "
+              f"{agg['mean_rel_rmse'] * 100:.1f}%")
 
-print("\n=== beyond-paper: consistency-policy ablation on HPC")
-for policy in ["full_fit_locked", "update_locked"]:
+    print("\n=== recommendation per scenario")
+    for m in si.fit_models():
+        scaler = Autoscaler(m.fit)
+        machine = m.key[0]
+        print(f"  {machine:>10}: run N={scaler.usable_peak_n()} partitions "
+              f"(peak {scaler.max_sustainable_rate():.2f} msg/s)")
+
+    print("\n=== beyond-paper: consistency-policy ablation on HPC")
     si2 = StreamInsight()
     si2.run(ExperimentDesign(machines=["wrangler"], partitions=PARTITIONS,
-                             points=[16000], centroids=[8192],
-                             n_messages=40, policy=policy))
-    m = si2.fit_models()[0]
-    peak = m.fit.peak_n
-    peak_s = f"{peak:.1f}" if peak != float("inf") else "inf"
-    print(f"  {policy:>17}: sigma={m.fit.sigma:.3f} kappa={m.fit.kappa:.5f} "
-          f"peak_N={peak_s:>5} T(16)={m.fit.predict(16):.2f} msg/s")
-print("characterize OK")
+                             points=[16000], centroids=[8192], n_messages=40,
+                             policy=["full_fit_locked", "update_locked"]),
+            parallel=True)
+    for m in si2.fit_models():
+        policy = m.key[4]
+        peak = m.fit.peak_n
+        peak_s = f"{peak:.1f}" if peak != float("inf") else "inf"
+        print(f"  {policy:>17}: sigma={m.fit.sigma:.3f} kappa={m.fit.kappa:.5f} "
+              f"peak_N={peak_s:>5} T(16)={m.fit.predict(16):.2f} msg/s")
+    print("characterize OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -127,12 +127,14 @@ class ExperimentResult:
     failed: int = 0
     retried: int = 0
     wall_virtual_s: float = 0.0
+    des_events: int = 0                # Simulator events consumed by this cell
 
     def record(self) -> dict:
         e = self.experiment
         return dict(machine=e.machine, partitions=e.partitions, points=e.points,
                     centroids=e.centroids, memory_mb=e.memory_mb,
-                    policy=e.effective_policy, throughput=self.throughput,
+                    policy=e.effective_policy, batch_max=e.batch_max,
+                    throughput=self.throughput,
                     latency_px_p50=self.latency_px.get("p50", float("nan")),
                     latency_px_mean=self.latency_px.get("mean", float("nan")),
                     latency_px_std=self.latency_px.get("std", float("nan")),
@@ -224,6 +226,7 @@ def run_experiment(exp: StreamExperiment, metrics: MetricRegistry | None = None,
         failed=engine.core.failed_batches,
         retried=engine.core.retried,
         wall_virtual_s=sim.now,
+        des_events=sim.events_processed,
     )
     pcs.close()
     return result

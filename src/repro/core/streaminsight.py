@@ -2,15 +2,38 @@
 
 Supports the paper's workflow (§IV): experimental design (parameter grids
 over machine M, parallelism N, message size MS, workload complexity WC,
-container memory), automated execution on the Streaming Mini-App, USL model
-fitting per scenario, and model evaluation on unseen configurations
-(train/test split, RMSE vs number of training configurations — Fig 7).
+container memory — plus, beyond the paper, micro-batch size ``batch_max``
+and the model-sharing consistency ``policy``), automated execution on the
+Streaming Mini-App, USL model fitting per scenario, and model evaluation on
+unseen configurations (train/test split, RMSE vs number of training
+configurations — Fig 7).
+
+Execution model: every ``StreamExperiment`` cell builds its own
+``PilotComputeService`` / ``Simulator`` seeded by ``exp.seed``, so cells are
+fully independent — like Pilot-Streaming's independently managed resource
+containers, they are embarrassingly parallel.  ``run_cells`` exploits that
+with a ``concurrent.futures`` process pool (``parallel=True``); because the
+seed travels inside the dataclass, parallel results are bit-identical to
+serial ones.  An optional on-disk ``ResultCache`` keyed by the experiment
+dataclass makes re-runs of a sweep free.
+
+Caveat: in parallel mode each worker collects trace events in its own
+``MetricRegistry``; the summaries inside ``ExperimentResult`` are computed
+in-worker, so results are unaffected, but per-event traces are not merged
+back into the caller's registry.  Run serially when you need raw traces.
 """
 
 from __future__ import annotations
 
+import concurrent.futures
+import dataclasses
+import hashlib
 import itertools
+import json
+import multiprocessing
+import os
 from dataclasses import dataclass, field
+from pathlib import Path
 
 import numpy as np
 
@@ -18,12 +41,21 @@ from repro.core.metrics import MetricRegistry
 from repro.core.miniapp import ExperimentResult, StreamExperiment, run_experiment
 from repro.core.usl import USLFit, fit_usl, rmse
 
-__all__ = ["ExperimentDesign", "ScenarioModel", "StreamInsight"]
+__all__ = ["ExperimentDesign", "ScenarioModel", "StreamInsight", "ResultCache",
+           "run_cells"]
+
+_CACHE_VERSION = 1
 
 
 @dataclass
 class ExperimentDesign:
-    """Cartesian experiment grid (the paper's control variables)."""
+    """Cartesian experiment grid (the paper's control variables).
+
+    ``batch_max`` and ``policy`` accept either a scalar (one level, the
+    seed behaviour) or a list of levels — first-class grid axes, so e.g.
+    the three model-sharing policies become directly comparable in one
+    design.
+    """
 
     machines: list = field(default_factory=lambda: ["serverless", "wrangler"])
     partitions: list = field(default_factory=lambda: [1, 2, 4, 8, 12, 16])
@@ -32,22 +64,140 @@ class ExperimentDesign:
     memory_mb: list = field(default_factory=lambda: [3008])
     n_messages: int = 80
     seed: int = 0
-    policy: str | None = None
+    policy: str | list | None = None
+    batch_max: int | list = 1
+
+    @staticmethod
+    def _levels(axis) -> list:
+        return list(axis) if isinstance(axis, (list, tuple)) else [axis]
 
     def experiments(self) -> list[StreamExperiment]:
         out = []
-        for m, n, p, c, mem in itertools.product(
+        for m, n, p, c, mem, pol, bm in itertools.product(
                 self.machines, self.partitions, self.points, self.centroids,
-                self.memory_mb):
+                self.memory_mb, self._levels(self.policy),
+                self._levels(self.batch_max)):
             out.append(StreamExperiment(
                 machine=m, partitions=n, points=p, centroids=c, memory_mb=mem,
-                n_messages=self.n_messages, seed=self.seed, policy=self.policy))
+                n_messages=self.n_messages, seed=self.seed, policy=pol,
+                batch_max=bm))
         return out
+
+
+# -- cell execution: cache + process pool -------------------------------------
+
+_RESULT_FIELDS = ("run_id", "throughput", "latency_px", "latency_br",
+                  "runtime_summary", "processed", "failed", "retried",
+                  "wall_virtual_s", "des_events")
+
+
+class ResultCache:
+    """On-disk memo of ``ExperimentResult``s keyed by the experiment
+    dataclass (all fields, stable-JSON-hashed), so re-running a sweep only
+    pays for cells whose parameters changed."""
+
+    def __init__(self, root: str | Path) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    @staticmethod
+    def key(exp: StreamExperiment) -> str:
+        payload = json.dumps(dataclasses.asdict(exp), sort_keys=True,
+                             default=repr)
+        digest = hashlib.sha256(f"v{_CACHE_VERSION}:{payload}".encode())
+        return digest.hexdigest()[:24]
+
+    def path(self, exp: StreamExperiment) -> Path:
+        return self.root / f"{self.key(exp)}.json"
+
+    def get(self, exp: StreamExperiment) -> ExperimentResult | None:
+        path = self.path(exp)
+        if not path.exists():
+            return None
+        try:
+            doc = json.loads(path.read_text())
+            return ExperimentResult(
+                experiment=StreamExperiment(**doc["experiment"]),
+                **{k: doc[k] for k in _RESULT_FIELDS})
+        except (KeyError, TypeError, ValueError, json.JSONDecodeError):
+            return None          # stale/corrupt entry: fall through to a run
+
+    def put(self, exp: StreamExperiment, res: ExperimentResult) -> None:
+        doc = {"experiment": dataclasses.asdict(res.experiment)}
+        doc.update({k: getattr(res, k) for k in _RESULT_FIELDS})
+        try:
+            payload = json.dumps(doc)
+        except TypeError:
+            return   # non-JSON experiment (e.g. exotic backend_attrs): a
+            #          memo that can't round-trip is skipped, never fatal
+        tmp = self.path(exp).with_suffix(".tmp")
+        tmp.write_text(payload)
+        tmp.replace(self.path(exp))
+
+
+def _run_cell(exp: StreamExperiment) -> ExperimentResult:
+    """Pool worker: one cell, private registry (results are self-contained)."""
+    return run_experiment(exp, MetricRegistry())
+
+
+def _mp_context():
+    """Never fork a potentially JAX-multithreaded parent (fork after jax
+    import is a documented deadlock hazard); forkserver forks workers from
+    a clean helper process, spawn is the portable fallback."""
+    try:
+        return multiprocessing.get_context("forkserver")
+    except ValueError:
+        return multiprocessing.get_context("spawn")
+
+
+def run_cells(experiments: list[StreamExperiment], *,
+              metrics: MetricRegistry | None = None, parallel: bool = False,
+              max_workers: int | None = None,
+              cache: ResultCache | str | Path | None = None,
+              on_result=None) -> list[ExperimentResult]:
+    """Execute experiment cells, optionally via a process pool and/or cache.
+
+    Results are returned in input order regardless of completion order, and
+    are bit-identical between serial and parallel execution (each cell's
+    DES is seeded from its own dataclass).  ``on_result(exp, res)`` is
+    invoked as each cell lands (live progress; in parallel mode that is
+    completion order, not input order).
+    """
+    if isinstance(cache, (str, Path)):
+        cache = ResultCache(cache)
+    notify = on_result or (lambda exp, res: None)
+    results: dict[int, ExperimentResult] = {}
+    pending: list[tuple[int, StreamExperiment]] = []
+    for i, exp in enumerate(experiments):
+        hit = cache.get(exp) if cache is not None else None
+        if hit is not None:
+            results[i] = hit
+            notify(exp, hit)
+        else:
+            pending.append((i, exp))
+    if parallel and len(pending) > 1:
+        workers = max_workers or min(len(pending), os.cpu_count() or 1)
+        with concurrent.futures.ProcessPoolExecutor(
+                max_workers=workers, mp_context=_mp_context()) as pool:
+            futures = {pool.submit(_run_cell, exp): i for i, exp in pending}
+            for fut in concurrent.futures.as_completed(futures):
+                i = futures[fut]
+                results[i] = fut.result()
+                notify(experiments[i], results[i])
+    else:
+        for i, exp in pending:
+            results[i] = run_experiment(
+                exp, metrics if metrics is not None else MetricRegistry())
+            notify(exp, results[i])
+    if cache is not None:
+        for i, _exp in pending:
+            cache.put(_exp, results[i])
+    return [results[i] for i in range(len(experiments))]
 
 
 @dataclass
 class ScenarioModel:
-    """USL model for one (machine, MS, WC, memory) scenario."""
+    """USL model for one (machine, MS, WC, memory, policy, batch) scenario."""
 
     key: tuple
     fit: USLFit
@@ -55,25 +205,41 @@ class ScenarioModel:
     t: np.ndarray
 
     def __str__(self) -> str:
-        m, p, c, mem = self.key
-        return (f"{m:>10} pts={p:<6} c={c:<5} mem={mem:<5} -> {self.fit.summary()}")
+        m, p, c, mem, pol, bm = self.key
+        return (f"{m:>10} pts={p:<6} c={c:<5} mem={mem:<5} "
+                f"policy={str(pol):<16} b={bm:<3} -> {self.fit.summary()}")
 
 
 class StreamInsight:
-    """Run a design, fit USL per scenario, evaluate prediction quality."""
+    """Run a design, fit USL per scenario, evaluate prediction quality.
 
-    def __init__(self, metrics: MetricRegistry | None = None) -> None:
+    ``parallel=True`` fans independent cells out over a process pool;
+    ``cache_dir`` memoizes finished cells on disk (see ``ResultCache``).
+    """
+
+    def __init__(self, metrics: MetricRegistry | None = None,
+                 cache_dir: str | Path | None = None,
+                 max_workers: int | None = None) -> None:
         self.metrics = metrics or MetricRegistry()
+        self.cache = ResultCache(cache_dir) if cache_dir is not None else None
+        self.max_workers = max_workers
         self.results: list[ExperimentResult] = []
 
     # -- execution -----------------------------------------------------------
-    def run(self, design: ExperimentDesign, verbose: bool = False) -> list[ExperimentResult]:
-        for exp in design.experiments():
-            res = run_experiment(exp, self.metrics)
-            self.results.append(res)
-            if verbose:
-                print(f"  ran {exp.machine} N={exp.partitions} pts={exp.points} "
-                      f"c={exp.centroids} mem={exp.memory_mb} -> T={res.throughput:.3f}")
+    def run(self, design: ExperimentDesign, verbose: bool = False,
+            parallel: bool = False) -> list[ExperimentResult]:
+        exps = design.experiments()
+
+        def progress(exp, res):
+            print(f"  ran {exp.machine} N={exp.partitions} pts={exp.points} "
+                  f"c={exp.centroids} mem={exp.memory_mb} "
+                  f"policy={exp.effective_policy} b={exp.batch_max} "
+                  f"-> T={res.throughput:.3f}", flush=True)
+
+        batch = run_cells(exps, metrics=self.metrics, parallel=parallel,
+                          max_workers=self.max_workers, cache=self.cache,
+                          on_result=progress if verbose else None)
+        self.results.extend(batch)
         return self.results
 
     def records(self) -> list[dict]:
@@ -82,7 +248,8 @@ class StreamInsight:
     # -- modeling --------------------------------------------------------------
     @staticmethod
     def scenario_key(rec: dict) -> tuple:
-        return (rec["machine"], rec["points"], rec["centroids"], rec["memory_mb"])
+        return (rec["machine"], rec["points"], rec["centroids"],
+                rec["memory_mb"], rec.get("policy"), rec.get("batch_max", 1))
 
     def fit_models(self, records: list[dict] | None = None) -> list[ScenarioModel]:
         records = records if records is not None else self.records()

@@ -12,15 +12,41 @@ semantics (ingest bandwidth, append latency) are modeled by the caller
 (see ``streaming.producer``), matching the paper's normative
 Pilot-Description: "the number of topic shards for Kinesis and Kafka can be
 specified using the same attribute".
+
+Consumers register *append subscribers* (``subscribe``): a callback invoked
+synchronously — outside the broker lock — after every append to a topic.
+This is the push path the streaming engines use to dispatch immediately
+instead of polling; it stays clock-agnostic because the broker only hands
+over the ``Message`` and the subscriber decides how to schedule itself
+(virtual-clock engines schedule on their ``Simulator``, the threaded engine
+sets a wakeup ``threading.Event``).
+
+Keyed routing uses a stable hash (``zlib.crc32``), not builtin ``hash`` —
+string hashing is salted per process (PYTHONHASHSEED), which would make
+key → partition assignment nondeterministic across runs and across the
+parallel experiment runner's pool workers, violating the DES determinism
+contract in ``sim.des``.
 """
 
 from __future__ import annotations
 
 import threading
+import zlib
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
-__all__ = ["Message", "Broker"]
+__all__ = ["Message", "Broker", "stable_hash"]
+
+
+def stable_hash(key: Any) -> int:
+    """Process-independent hash for keyed partition routing (crc32)."""
+    if isinstance(key, bytes):
+        data = key
+    elif isinstance(key, str):
+        data = key.encode("utf-8")
+    else:
+        data = repr(key).encode("utf-8")
+    return zlib.crc32(data)
 
 
 @dataclass(frozen=True)
@@ -46,6 +72,7 @@ class Broker:
         self._topics: dict[str, list[_Partition]] = {}
         self._commits: dict[tuple[str, str, int], int] = {}  # (group, topic, part) -> next offset
         self._rr: dict[str, int] = {}
+        self._subs: dict[str, list[Callable[[Message], None]]] = {}
         self._lock = threading.RLock()
 
     # -- topic admin -------------------------------------------------------
@@ -72,7 +99,18 @@ class Broker:
                 p = self._rr[topic] % n
                 self._rr[topic] += 1
                 return p
-            return hash(key) % n
+            return stable_hash(key) % n
+
+    def subscribe(self, topic: str, fn: Callable[[Message], None]) -> None:
+        """Register ``fn(msg)`` to be called after every append to ``topic``.
+
+        Callbacks run synchronously in the appender's context, outside the
+        broker lock; they must not block.  This is the engines' push path.
+        """
+        with self._lock:
+            if topic not in self._topics:
+                raise KeyError(f"unknown topic '{topic}'")
+            self._subs.setdefault(topic, []).append(fn)
 
     def append(self, topic: str, value: Any, *, ts: float, key: Any = None,
                partition: int | None = None, run_id: str | None = None,
@@ -84,7 +122,10 @@ class Broker:
             msg = Message(topic, partition, len(part.log), ts, key, value,
                           run_id, msg_id, size_bytes)
             part.log.append(msg)
-            return msg
+            subs = list(self._subs.get(topic, ()))
+        for fn in subs:
+            fn(msg)
+        return msg
 
     # -- consume --------------------------------------------------------------
     def fetch(self, topic: str, partition: int, offset: int,

@@ -7,6 +7,15 @@ messages are micro-batched into one compute-unit (the Lambda/Kinesis batch
 semantics); the CU is submitted to the pilot, and its completion commits the
 partition offset.
 
+Dispatch is **push-based**: the engines register an append subscriber on the
+broker (``Broker.subscribe``) and dispatch the moment a message lands in an
+idle partition — "a task is then automatically spawned in response to an
+event", literally.  The virtual-clock engine therefore schedules *no* idle
+poll events at all; in the seed implementation each idle partition re-polled
+every 5 ms of virtual time, and those O(partitions × idle_time /
+poll_interval) events dominated ``Simulator`` event counts in every
+benchmark sweep.
+
 Fault tolerance (framework-level, beyond the paper's prose but required for
 scale):
 
@@ -21,9 +30,10 @@ scale):
   commit path.
 
 Two drivers share this logic:
-``SimStreamingEngine`` (virtual clock, event callbacks) powers the
-benchmarks; ``ThreadedStreamingEngine`` (wall clock) powers the real-compute
-examples on the local / jaxmesh backends.
+``SimStreamingEngine`` (virtual clock, push wakeups on the broker's append
+hook) powers the benchmarks; ``ThreadedStreamingEngine`` (wall clock, append
+hook sets per-partition wakeup events) powers the real-compute examples on
+the local / jaxmesh backends.
 """
 
 from __future__ import annotations
@@ -59,8 +69,18 @@ class Workload:
 class _PartitionState:
     next_offset: int = 0
     inflight: bool = False
-    batch_done_key: tuple | None = None  # (offset_lo, offset_hi) guard
     retries: int = 0
+
+    def is_done(self, key: tuple) -> bool:
+        """True if the (offset_lo, offset_hi) batch already committed.
+
+        Batches are fetched contiguously from ``next_offset`` and commits
+        only ever advance it, so a batch is settled iff the offset has
+        moved past its end.  This guard must hold for *any* historical
+        batch — a late straggler duplicate completing after several newer
+        batches must never roll ``next_offset`` back (the seed's
+        last-key-only guard allowed exactly that)."""
+        return key[1] <= self.next_offset
 
 
 class _EngineCore:
@@ -81,10 +101,19 @@ class _EngineCore:
         self.n_partitions = broker.num_partitions(topic)
         self.parts = [_PartitionState() for _ in range(self.n_partitions)]
         self.completed_runtimes: list[float] = []
+        # aggregate counters are written by every consumer thread of the
+        # threaded driver; drain() relies on their exact sum, so updates
+        # must not be lost to interleaved read-modify-writes
+        self.counter_lock = threading.Lock()
         self.processed = 0
         self.failed_batches = 0
+        self.abandoned = 0          # actual messages skipped by poison batches
         self.duplicates = 0
         self.retried = 0
+        # Empty fetches: none schedule events (push engines just go quiet).
+        # Grows with completions that catch up to the producer, so it is a
+        # caught-up-consumer signal, not an idle-poll count.
+        self.idle_fetches = 0
 
     def make_cu_desc(self, msgs: list[Message], partition: int | None) -> ComputeUnitDescription:
         profile = self.workload.profile_for(msgs) if self.workload.profile_for else TaskProfile()
@@ -97,16 +126,17 @@ class _EngineCore:
         """Commit + metrics; returns False if another copy already won."""
         ps = self.parts[partition]
         key = (msgs[0].offset, msgs[-1].offset + 1)
-        if ps.batch_done_key == key:
-            self.duplicates += 1
+        if ps.is_done(key):
+            with self.counter_lock:
+                self.duplicates += 1
             return False
-        ps.batch_done_key = key
         ps.next_offset = msgs[-1].offset + 1
         self.broker.commit(self.group, self.topic, partition, ps.next_offset)
         for m in msgs:
             self.metrics.record(self.run_id, "engine", "complete", now,
                                 msg_id=m.msg_id, partition=partition)
-        self.processed += len(msgs)
+        with self.counter_lock:
+            self.processed += len(msgs)
         return True
 
     @property
@@ -117,7 +147,13 @@ class _EngineCore:
 
 
 class SimStreamingEngine:
-    """Virtual-clock engine (event-driven, used by all benchmarks)."""
+    """Virtual-clock engine (push-dispatched, used by all benchmarks).
+
+    ``start`` subscribes to the broker's append hook and scans each
+    partition once for pre-existing backlog; after that the engine is woken
+    only by appends and by its own batch completions — no poll events.
+    ``poll_interval`` is retained for API compatibility but unused.
+    """
 
     def __init__(self, sim: Simulator, broker: Broker, topic: str, pilot: Pilot,
                  workload: Workload, metrics: MetricRegistry, run_id: str,
@@ -134,8 +170,10 @@ class SimStreamingEngine:
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
+        self.core.broker.subscribe(self.core.topic,
+                                   lambda msg: self._drain(msg.partition))
         for p in range(self.core.n_partitions):
-            self.sim.schedule(0.0, lambda p=p: self._poll(p))
+            self.sim.schedule(0.0, lambda p=p: self._drain(p))
 
     @property
     def finished(self) -> bool:
@@ -150,16 +188,21 @@ class SimStreamingEngine:
         if not self.finished:
             raise TimeoutError("engine did not drain the topic in time")
 
-    # -- partition consumer loop ---------------------------------------------
-    def _poll(self, partition: int) -> None:
+    # -- push-dispatched partition consumer -----------------------------------
+    def _drain(self, partition: int) -> None:
+        """Dispatch the next pending batch of ``partition``, if idle.
+
+        Invoked synchronously from the broker's append hook and from batch
+        completions — both already run inside a simulator event, so no extra
+        event is scheduled on the hot path.
+        """
         core = self.core
         ps = core.parts[partition]
         if ps.inflight:
             return
         msgs = core.broker.fetch(core.topic, partition, ps.next_offset, core.batch_max)
         if not msgs:
-            if not self.finished:
-                self.sim.schedule(self.poll_interval, lambda: self._poll(partition))
+            core.idle_fetches += 1
             return
         ps.inflight = True
         ps.retries = 0
@@ -171,34 +214,39 @@ class SimStreamingEngine:
         core.metrics.record(core.run_id, "engine", "dispatch", self.sim.now,
                             partition=partition, batch=len(msgs))
         cu = core.pilot.submit_compute_unit(desc)
-        cu.add_done_callback(lambda cu: self._on_final(partition, msgs, cu))
+        straggler_ev = None
         if self.straggler_mitigation:
             timeout = core.straggler_timeout
             if timeout != float("inf"):
-                self.sim.schedule(timeout, lambda: self._straggler_check(partition, msgs, cu))
+                straggler_ev = self.sim.schedule(
+                    timeout, lambda: self._straggler_check(partition, msgs, cu))
+        cu.add_done_callback(lambda cu: self._on_final(partition, msgs, cu, straggler_ev))
 
     def _straggler_check(self, partition: int, msgs: list[Message], cu) -> None:
         core = self.core
         ps = core.parts[partition]
         key = (msgs[0].offset, msgs[-1].offset + 1)
-        if cu.state.is_final or ps.batch_done_key == key:
+        if cu.state.is_final or ps.is_done(key):
             return
         core.metrics.record(core.run_id, "engine", "straggler_dup", self.sim.now,
                             partition=partition)
         self._dispatch(partition, msgs, pinned=False)  # speculative duplicate
 
-    def _on_final(self, partition: int, msgs: list[Message], cu) -> None:
+    def _on_final(self, partition: int, msgs: list[Message], cu,
+                  straggler_ev=None) -> None:
         core = self.core
         ps = core.parts[partition]
+        if straggler_ev is not None:
+            self.sim.cancel(straggler_ev)
         if cu.state == State.DONE:
             if core.on_batch_done(partition, msgs, self.sim.now):
                 core.completed_runtimes.append(cu.runtime)
                 ps.inflight = False
-                self.sim.schedule(0.0, lambda: self._poll(partition))
+                self._drain(partition)
             return
         # FAILED / CANCELED
         key = (msgs[0].offset, msgs[-1].offset + 1)
-        if ps.batch_done_key == key:
+        if ps.is_done(key):
             return  # a duplicate already completed this batch
         if ps.retries < core.max_retries:
             ps.retries += 1
@@ -209,17 +257,23 @@ class SimStreamingEngine:
             self._dispatch(partition, msgs, pinned=pinned)
         else:
             core.failed_batches += 1
+            core.abandoned += len(msgs)
             core.metrics.record(core.run_id, "engine", "abandon", self.sim.now,
-                                partition=partition)
-            ps.batch_done_key = key
+                                partition=partition, messages=len(msgs))
             ps.next_offset = msgs[-1].offset + 1   # skip poison batch, keep draining
             core.broker.commit(core.group, core.topic, partition, ps.next_offset)
             ps.inflight = False
-            self.sim.schedule(0.0, lambda: self._poll(partition))
+            self._drain(partition)
 
 
 class ThreadedStreamingEngine:
-    """Wall-clock engine: one consumer thread per partition, real compute."""
+    """Wall-clock engine: one consumer thread per partition, real compute.
+
+    Consumers block on a per-partition wakeup event that the broker's append
+    hook sets, so an idle partition dispatches as soon as data lands instead
+    of sleeping out a poll interval (``poll_interval`` remains the bounded
+    fallback wait, a safety net against missed wakeups).
+    """
 
     def __init__(self, broker: Broker, topic: str, pilot: Pilot, workload: Workload,
                  metrics: MetricRegistry, run_id: str, *, group: str = "engine",
@@ -230,9 +284,13 @@ class ThreadedStreamingEngine:
         self.poll_interval = poll_interval
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        self._wakeups = [threading.Event() for _ in range(self.core.n_partitions)]
 
     def start(self) -> None:
         import time
+        self.core.broker.subscribe(
+            self.core.topic,
+            lambda msg: self._wakeups[msg.partition % len(self._wakeups)].set())
         for p in range(self.core.n_partitions):
             t = threading.Thread(target=self._consume, args=(p, time), daemon=True)
             t.start()
@@ -241,10 +299,16 @@ class ThreadedStreamingEngine:
     def _consume(self, partition: int, time_mod) -> None:
         core = self.core
         ps = core.parts[partition]
+        wakeup = self._wakeups[partition]
         while not self._stop.is_set():
+            wakeup.clear()
             msgs = core.broker.fetch(core.topic, partition, ps.next_offset, core.batch_max)
             if not msgs:
-                time_mod.sleep(self.poll_interval)
+                with core.counter_lock:
+                    core.idle_fetches += 1
+                # an append between the fetch and this wait sets the event,
+                # so the wait returns immediately — no lost wakeups
+                wakeup.wait(self.poll_interval)
                 continue
             attempts = 0
             while True:
@@ -256,23 +320,40 @@ class ThreadedStreamingEngine:
                     break
                 except Exception:  # noqa: BLE001 — retry loop
                     attempts += 1
-                    core.retried += 1
+                    with core.counter_lock:
+                        core.retried += 1
                     if attempts > core.max_retries:
-                        core.failed_batches += 1
                         ps.next_offset = msgs[-1].offset + 1
                         core.broker.commit(core.group, core.topic, partition, ps.next_offset)
+                        # counted after the commit so drain() can't observe
+                        # the count before the offset has advanced
+                        with core.counter_lock:
+                            core.failed_batches += 1
+                            core.abandoned += len(msgs)
                         break
 
     def stop(self, timeout: float = 5.0) -> None:
         self._stop.set()
+        for ev in self._wakeups:
+            ev.set()
         for t in self._threads:
             t.join(timeout=timeout)
 
     def drain(self, n_expected: int, timeout: float = 60.0) -> None:
+        """Block until ``n_expected`` messages are accounted for.
+
+        Counts *actual* abandoned messages (``core.abandoned``), not the
+        ``failed_batches * batch_max`` estimate the seed used: the final
+        batch of a partition can be smaller than ``batch_max``, so the
+        estimate over-counted and drain could return with messages still
+        pending in the topic.
+        """
         import time
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
-            if self.core.processed + self.core.failed_batches * self.core.batch_max >= n_expected:
+            if self.core.processed + self.core.abandoned >= n_expected:
                 return
             time.sleep(self.poll_interval)
-        raise TimeoutError(f"drained {self.core.processed}/{n_expected} messages")
+        raise TimeoutError(
+            f"drained {self.core.processed}+{self.core.abandoned} abandoned"
+            f"/{n_expected} messages")

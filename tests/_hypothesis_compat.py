@@ -1,0 +1,186 @@
+"""Fallback property-testing shim for environments without ``hypothesis``.
+
+The tier-1 suite uses a small slice of the hypothesis API (``given``,
+``settings``, ``strategies.{floats,integers,lists,tuples,sampled_from}``).
+This container cannot install hypothesis, so ``install()`` — called from
+``conftest.py`` before test modules are imported — registers a minimal
+stand-in under ``sys.modules['hypothesis']`` when the real package is
+absent.  Test modules keep their idiomatic ``from hypothesis import ...``
+imports and work in both worlds.
+
+The stand-in degrades gracefully: each ``@given`` test runs a small, fixed,
+deterministic set of examples (boundary values first, then seeded-random
+draws) instead of hypothesis's adaptive search.  That is deliberately a
+smoke-strength property check, not a replacement for real hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+# Fixed example budget for the fallback: boundaries + a few random draws.
+_MAX_EXAMPLES = 8
+_SEED = 0x5EED_CAFE
+
+
+class _Strategy:
+    """One value generator.  ``draw(rng, i)`` yields example ``i``: index 0
+    and 1 are the strategy's boundary values, the rest are random."""
+
+    def draw(self, rng: random.Random, i: int):
+        raise NotImplementedError
+
+    def map(self, fn):
+        outer = self
+
+        class _Mapped(_Strategy):
+            def draw(self, rng, i):
+                return fn(outer.draw(rng, i))
+
+        return _Mapped()
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float) -> None:
+        self.lo, self.hi = float(lo), float(hi)
+
+    def draw(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int) -> None:
+        self.lo, self.hi = int(lo), int(hi)
+
+    def draw(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements) -> None:
+        self.elements = list(elements)
+
+    def draw(self, rng, i):
+        if i < len(self.elements):
+            return self.elements[i]
+        return rng.choice(self.elements)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int = 0,
+                 max_size: int | None = None) -> None:
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def draw(self, rng, i):
+        if i == 0:
+            size = self.min_size
+        elif i == 1:
+            size = min(self.max_size, max(self.min_size, 3))
+        else:
+            size = rng.randint(self.min_size, min(self.max_size, 16))
+        return [self.elem.draw(rng, 2 + rng.randint(0, 10)) for _ in range(size)]
+
+
+class _Tuples(_Strategy):
+    def __init__(self, *elems: _Strategy) -> None:
+        self.elems = elems
+
+    def draw(self, rng, i):
+        return tuple(e.draw(rng, i) for e in self.elems)
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Floats(min_value, max_value)
+
+
+def integers(min_value: int, max_value: int, **_kw) -> _Strategy:
+    return _Integers(min_value, max_value)
+
+
+def sampled_from(elements) -> _Strategy:
+    return _SampledFrom(elements)
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int | None = None,
+          **_kw) -> _Strategy:
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Tuples(*elements)
+
+
+def given(*garg_strategies: _Strategy, **gkw_strategies: _Strategy):
+    def deco(fn):
+        # Like real hypothesis, positional strategies bind to the RIGHTMOST
+        # unbound parameters (leading params stay free, e.g. for fixtures).
+        params = list(inspect.signature(fn).parameters.values())
+        free = [p.name for p in params if p.name not in gkw_strategies]
+        pos_names = free[len(free) - len(garg_strategies):] \
+            if garg_strategies else []
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", _MAX_EXAMPLES)),
+                    _MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for i in range(n):
+                kws = {name: s.draw(rng, i)
+                       for name, s in zip(pos_names, garg_strategies)}
+                kws.update({k: s.draw(rng, i)
+                            for k, s in gkw_strategies.items()})
+                fn(*args, **kws, **kwargs)
+
+        # Hide the strategy-bound parameters from pytest's fixture resolver:
+        # expose only the params given() does NOT fill in.
+        bound = set(pos_names) | set(gkw_strategies)
+        residual = [p for p in params if p.name not in bound]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(residual)
+        wrapper.hypothesis_compat_fallback = True
+        return wrapper
+
+    return deco
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._compat_max_examples = min(kwargs.get("max_examples", _MAX_EXAMPLES),
+                                      _MAX_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` iff the real package is missing."""
+    try:
+        import hypothesis  # noqa: F401 — real package wins
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "lists", "tuples", "sampled_from"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,0 +1,19 @@
+"""Suite-wide setup: import paths and the hypothesis fallback shim.
+
+Runs before any test module is collected, so the ``from hypothesis import
+...`` lines in the property-test modules resolve even where hypothesis is
+not installable (the shim in ``_hypothesis_compat`` is registered in
+``sys.modules`` only when the real package is absent).
+"""
+
+import sys
+from pathlib import Path
+
+_HERE = Path(__file__).resolve().parent
+for p in (str(_HERE), str(_HERE.parent / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import _hypothesis_compat  # noqa: E402
+
+_hypothesis_compat.install()

@@ -29,6 +29,16 @@ def test_workload_profile_scaling():
     assert small.msg_bytes == pytest.approx(296_000, rel=0.01)
 
 
+def test_reference_cell_event_budget():
+    """Push-based engine acceptance: the reference cell (N=8, 200 messages)
+    must stay >= 5x below the seed polling engine's 6,189 DES events."""
+    res = run_experiment(StreamExperiment(
+        machine="serverless", partitions=8, n_messages=200, seed=0))
+    assert res.processed == 200
+    assert res.des_events > 0
+    assert res.des_events <= 6189 / 5, res.des_events
+
+
 def test_serverless_scales_linearly():
     ns = [1, 2, 4, 8]
     t = throughputs("serverless", ns)

@@ -42,6 +42,46 @@ def test_broker_key_routing_stable():
     assert all(b.partition_for("t", "user-1") == p1 for _ in range(5))
 
 
+def test_broker_key_routing_stable_across_processes():
+    """Keyed routing must not depend on PYTHONHASHSEED (builtin ``hash`` of
+    strings is salted per process — the seed bug this regression pins)."""
+    import os
+    import subprocess
+    import sys
+    import zlib
+    from pathlib import Path
+
+    b = Broker()
+    b.create_topic("t", 4)
+    assert b.partition_for("t", "user-1") == zlib.crc32(b"user-1") % 4
+    assert b.partition_for("t", 12345) == zlib.crc32(b"12345") % 4
+
+    root = Path(__file__).resolve().parents[1]
+    code = ("from repro.streaming.broker import Broker; b = Broker(); "
+            "b.create_topic('t', 4); print(b.partition_for('t', 'user-1'))")
+    outs = set()
+    for hashseed in ("0", "1", "424242"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed,
+                   PYTHONPATH=str(root / "src"))
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, check=True)
+        outs.add(proc.stdout.strip())
+    assert len(outs) == 1, f"routing varied with hash seed: {outs}"
+
+
+def test_broker_append_notifies_subscribers():
+    b = Broker()
+    b.create_topic("t", 2)
+    seen = []
+    b.subscribe("t", lambda msg: seen.append((msg.partition, msg.offset)))
+    b.append("t", "a", ts=0.0, partition=1)
+    b.append("t", "b", ts=0.0, partition=0)
+    b.append("t", "c", ts=0.0, partition=1)
+    assert seen == [(1, 0), (0, 0), (1, 1)]
+    with pytest.raises(KeyError):
+        b.subscribe("nope", lambda msg: None)
+
+
 def test_broker_commit_and_lag():
     b = Broker()
     b.create_topic("t", 1)
@@ -224,5 +264,58 @@ def test_engine_poison_batch_abandoned_after_retries():
     eng.run_to_completion()
     assert eng.core.processed == 0
     assert eng.core.failed_batches == 6
+    assert eng.core.abandoned == 6          # actual messages, not an estimate
     # engine still drained the topic (no deadlock)
     assert broker.committed("engine", "t", 0) == broker.end_offset("t", 0)
+
+
+def test_engine_is_push_based_no_idle_poll_events():
+    """On an empty topic the engine consumes exactly one event per partition
+    (the initial backlog scan) and then goes quiet — the seed polling engine
+    burned ~2,000 events/partition over the same 10 virtual seconds."""
+    sim, broker, metrics, run_id, prod, eng, pilot = build_pipeline(
+        partitions=4, n_messages=8)
+    eng.start()
+    sim.run_until(t=sim.now + 10.0)
+    assert sim.events_processed == 4
+    assert eng.core.idle_fetches == 4
+    # once data flows, everything still completes via push wakeups
+    prod.start()
+    eng.run_to_completion()
+    assert eng.core.processed == 8
+
+
+def test_threaded_drain_waits_for_actual_abandon():
+    """drain() must count actual abandoned messages: with a final batch
+    smaller than batch_max, the seed's ``failed_batches * batch_max``
+    estimate returned while messages were still pending in the topic."""
+    from repro.streaming.engine import ThreadedStreamingEngine
+
+    broker = Broker()
+    broker.create_topic("t", 2)
+    for i in range(3):
+        broker.append("t", i, ts=0.0, partition=0)
+    for i in range(5):
+        broker.append("t", i, ts=0.0, partition=1)
+
+    pcs = PilotComputeService()
+    pilot = pcs.submit_pilot(PilotDescription(resource="local://", concurrency=2))
+
+    def explode(msgs):
+        raise RuntimeError("poison")
+
+    eng = ThreadedStreamingEngine(
+        broker, "t", pilot, Workload(fn=explode, name="poison"),
+        MetricRegistry(), new_run_id("drain"), batch_max=4, max_retries=1)
+    eng.start()
+    try:
+        eng.drain(8, timeout=20.0)
+        # every message is accounted for AND the topic is actually drained
+        assert eng.core.abandoned == 8
+        assert eng.core.processed == 0
+        assert eng.core.failed_batches == 3     # batches of 3, 4 and 1
+        for p in range(2):
+            assert broker.committed("engine", "t", p) == broker.end_offset("t", p)
+    finally:
+        eng.stop()
+        pcs.close()

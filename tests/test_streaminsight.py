@@ -1,0 +1,97 @@
+"""Parallel experiment runner, result cache, and grid axes (StreamInsight)."""
+
+import pytest
+
+from repro.core.miniapp import StreamExperiment, run_experiment
+from repro.core.streaminsight import (ExperimentDesign, ResultCache,
+                                      StreamInsight, run_cells)
+
+
+def small_design(**kw):
+    kw.setdefault("machines", ["serverless"])
+    kw.setdefault("partitions", [1, 2])
+    kw.setdefault("n_messages", 16)
+    return ExperimentDesign(**kw)
+
+
+def test_parallel_runner_bit_identical_to_serial():
+    """Cells carry their own seed, so pool execution changes nothing."""
+    serial = StreamInsight()
+    serial.run(small_design())
+    pooled = StreamInsight()
+    pooled.run(small_design(), parallel=True)
+    assert serial.records() == pooled.records()
+    fits_s = [(m.fit.sigma, m.fit.kappa, m.fit.gamma)
+              for m in serial.fit_models()]
+    fits_p = [(m.fit.sigma, m.fit.kappa, m.fit.gamma)
+              for m in pooled.fit_models()]
+    assert fits_s == fits_p
+
+
+def test_run_cells_preserves_input_order():
+    cells = [StreamExperiment(machine="serverless", partitions=n,
+                              n_messages=12, seed=0) for n in (4, 1, 2)]
+    results = run_cells(cells, parallel=True)
+    assert [r.experiment.partitions for r in results] == [4, 1, 2]
+
+
+def test_result_cache_serves_rerun_without_executing(tmp_path, monkeypatch):
+    si = StreamInsight(cache_dir=tmp_path)
+    si.run(small_design())
+    first = si.records()
+    assert len(list(tmp_path.glob("*.json"))) == 2
+
+    # a second sweep over the same design must not execute a single cell
+    import repro.core.streaminsight as streaminsight_mod
+
+    def boom(*_a, **_kw):
+        raise AssertionError("cache miss: run_experiment was called")
+
+    monkeypatch.setattr(streaminsight_mod, "run_experiment", boom)
+    si2 = StreamInsight(cache_dir=tmp_path)
+    si2.run(small_design())
+    assert si2.records() == first
+
+
+def test_result_cache_key_covers_all_fields(tmp_path):
+    base = StreamExperiment(machine="serverless", partitions=2, n_messages=16)
+    cache = ResultCache(tmp_path)
+    cache.put(base, run_experiment(base))
+    assert cache.get(base) is not None
+    for changed in (
+            StreamExperiment(machine="serverless", partitions=2, n_messages=17),
+            StreamExperiment(machine="serverless", partitions=2, n_messages=16,
+                             seed=1),
+            StreamExperiment(machine="serverless", partitions=2, n_messages=16,
+                             batch_max=4),
+            StreamExperiment(machine="serverless", partitions=2, n_messages=16,
+                             policy="update_locked"),
+    ):
+        assert cache.get(changed) is None, changed
+
+
+def test_policy_and_batch_max_are_grid_axes():
+    d = ExperimentDesign(machines=["wrangler"], partitions=[1],
+                         policy=["full_fit_locked", "lock_free"],
+                         batch_max=[1, 4])
+    exps = d.experiments()
+    assert len(exps) == 4
+    assert {(e.policy, e.batch_max) for e in exps} == {
+        ("full_fit_locked", 1), ("full_fit_locked", 4),
+        ("lock_free", 1), ("lock_free", 4)}
+    # scalar (seed-style) values still work unchanged
+    d2 = ExperimentDesign(policy="update_locked", batch_max=2)
+    assert all(e.policy == "update_locked" and e.batch_max == 2
+               for e in d2.experiments())
+
+
+def test_scenario_key_separates_policy_levels():
+    si = StreamInsight()
+    si.run(ExperimentDesign(machines=["wrangler"], partitions=[1, 2],
+                            n_messages=16,
+                            policy=["full_fit_locked", "update_locked"]),
+           parallel=True)
+    models = si.fit_models()
+    assert len(models) == 2
+    assert {m.key[4] for m in models} == {"full_fit_locked", "update_locked"}
+    assert all(len(m.n) == 2 for m in models)
