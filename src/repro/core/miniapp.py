@@ -30,7 +30,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.metrics import MetricRegistry, new_run_id, percentile_summary
-from repro.pilot.api import PilotComputeService, PilotDescription, TaskProfile
+from repro.pilot.api import (PilotComputeService, PilotDescription, State,
+                             TaskProfile)
 from repro.streaming.broker import Broker
 from repro.streaming.engine import SimStreamingEngine, Workload
 from repro.streaming.producer import (AIMD, PartitionIngest, SharedFsIngest,
@@ -145,16 +146,12 @@ class ExperimentResult:
 
 def steady_state_throughput(metrics: MetricRegistry, run_id: str,
                             warmup_frac: float = 0.25) -> float:
-    """Completions/sec over the post-warmup window (max sustained throughput)."""
-    evs = sorted(e.ts for e in metrics.events(run_id=run_id, kind="complete"))
-    if len(evs) < 4:
-        return 0.0
-    k = int(len(evs) * warmup_frac)
-    window = evs[k:]
-    span = window[-1] - window[0]
-    if span <= 0:
-        return 0.0
-    return (len(window) - 1) / span
+    """Completions/sec over the post-warmup window (max sustained throughput).
+
+    Thin wrapper over the registry's vectorized implementation, kept for
+    API compatibility."""
+    return metrics.steady_state_throughput(run_id, "complete",
+                                           warmup_frac=warmup_frac)
 
 
 def run_experiment(exp: StreamExperiment, metrics: MetricRegistry | None = None,
@@ -181,14 +178,16 @@ def run_experiment(exp: StreamExperiment, metrics: MetricRegistry | None = None,
     wl = KMeansStreamWorkload(points=exp.points, centroids=exp.centroids,
                               policy=exp.effective_policy,
                               n_partitions=exp.partitions)
-    workload = Workload(profile_for=lambda msgs: wl.profile(), name="kmeans")
+    # the cell's cost profile is message-independent — compute it once
+    # instead of rebuilding a TaskProfile per dispatched micro-batch
+    profile = wl.profile()
+    workload = Workload(profile_for=lambda msgs: profile, name="kmeans")
 
     # broker ingest path: Kinesis shard limits vs Kafka-on-Lustre
     if exp.machine == "serverless":
         ingest = PartitionIngest(sim, exp.partitions, bw_per_partition=1e6)
     else:
-        fs = backend._pilots[pilot.uid]["fs"]
-        ingest = SharedFsIngest(sim, fs)
+        ingest = SharedFsIngest(sim, backend.shared_resource(pilot, "fs"))
 
     def msg_factory(i: int):
         return (None, {"n_points": exp.points, "seed": exp.seed * 100003 + i},
@@ -214,7 +213,7 @@ def run_experiment(exp: StreamExperiment, metrics: MetricRegistry | None = None,
     lat_px = metrics.latencies(run_id, "append", "complete")
     lat_br = metrics.latencies(run_id, "produce", "append")
     runtimes = np.asarray([cu.runtime for cu in pilot.compute_units
-                           if cu.state.name == "DONE"])
+                           if cu.state is State.DONE])
     result = ExperimentResult(
         experiment=exp,
         run_id=run_id,

@@ -12,19 +12,35 @@ Execution model: every ``StreamExperiment`` cell builds its own
 ``PilotComputeService`` / ``Simulator`` seeded by ``exp.seed``, so cells are
 fully independent — like Pilot-Streaming's independently managed resource
 containers, they are embarrassingly parallel.  ``run_cells`` exploits that
-with a ``concurrent.futures`` process pool (``parallel=True``); because the
-seed travels inside the dataclass, parallel results are bit-identical to
-serial ones.  An optional on-disk ``ResultCache`` keyed by the experiment
-dataclass makes re-runs of a sweep free.
+with a *persistent* process pool: workers are spawned lazily on the first
+pooled sweep and reused across ``run_cells`` calls for the life of the
+process, amortizing pool startup the way Pilot-Streaming keeps resource
+containers warm across workloads.  Because the seed travels inside the
+dataclass, parallel results are bit-identical to serial ones.
 
-Caveat: in parallel mode each worker collects trace events in its own
-``MetricRegistry``; the summaries inside ``ExperimentResult`` are computed
-in-worker, so results are unaffected, but per-event traces are not merged
-back into the caller's registry.  Run serially when you need raw traces.
+``parallel="auto"`` (the default, and what ``parallel=True`` resolves to)
+switches between serial and pooled execution on an estimated-work heuristic
+(``n_messages × points × centroids`` summed over uncached cells): cheap
+grids run serially — on small sweeps pool IPC costs more than the cells —
+and only heavy grids fan out, so parallel mode is never a pessimization.
+``parallel="force"`` always uses the pool; ``parallel=False`` never does.
+Cells are submitted in contiguous chunks (several cells per task) to keep
+IPC overhead sublinear in grid size.
+
+Pooled workers collect trace events in private ``MetricRegistry``s; the
+summaries inside ``ExperimentResult`` are computed in-worker, so results
+are identical either way, and each worker additionally returns a compact
+per-(component, kind) event summary that ``run_cells`` merges into the
+caller's registry (``MetricRegistry.trace_summary(run_id)``).  Run serially
+when you need raw per-event traces; pooled sweeps surface merged summaries.
+
+An optional on-disk ``ResultCache`` keyed by the experiment dataclass makes
+re-runs of a sweep free.
 """
 
 from __future__ import annotations
 
+import atexit
 import concurrent.futures
 import dataclasses
 import hashlib
@@ -32,6 +48,7 @@ import itertools
 import json
 import multiprocessing
 import os
+import threading
 from dataclasses import dataclass, field
 from pathlib import Path
 
@@ -42,7 +59,7 @@ from repro.core.miniapp import ExperimentResult, StreamExperiment, run_experimen
 from repro.core.usl import USLFit, fit_usl, rmse
 
 __all__ = ["ExperimentDesign", "ScenarioModel", "StreamInsight", "ResultCache",
-           "run_cells"]
+           "run_cells", "estimated_cost", "PARALLEL_COST_THRESHOLD"]
 
 _CACHE_VERSION = 1
 
@@ -135,9 +152,16 @@ class ResultCache:
         tmp.replace(self.path(exp))
 
 
-def _run_cell(exp: StreamExperiment) -> ExperimentResult:
-    """Pool worker: one cell, private registry (results are self-contained)."""
-    return run_experiment(exp, MetricRegistry())
+def _run_cell_chunk(exps: list[StreamExperiment]) -> list[tuple[ExperimentResult, dict]]:
+    """Pool worker: a contiguous chunk of cells, one private registry per
+    cell (results are self-contained); each cell also ships back its
+    compact trace summary for the caller's registry."""
+    out = []
+    for exp in exps:
+        registry = MetricRegistry()
+        res = run_experiment(exp, registry)
+        out.append((res, registry.export_summary()))
+    return out
 
 
 def _mp_context():
@@ -150,18 +174,84 @@ def _mp_context():
         return multiprocessing.get_context("spawn")
 
 
+# -- persistent worker pool ---------------------------------------------------
+#
+# Pool startup on a small container costs ~0.3 s — more than an entire
+# light sweep (the exact failure mode the ROADMAP flagged: PR 1's
+# per-sweep pool was 27x slower than serial on cheap grids).  The pool is
+# created lazily on the first sweep heavy enough to want it and reused for
+# the life of the process, like Pilot-Streaming's warm resource containers.
+
+_pool_lock = threading.Lock()
+_pool: concurrent.futures.ProcessPoolExecutor | None = None
+_pool_workers = 0
+
+# Auto-switch threshold on the summed cell cost estimate
+# (n_messages × points × centroids).  Calibrated on the 2-core reference
+# container: the perf-smoke sweep (~6e10) runs in ~0.1 s serially — far
+# below pool IPC break-even — while grids an order of magnitude heavier
+# amortize the warm pool.
+PARALLEL_COST_THRESHOLD = 2e11
+
+
+def estimated_cost(experiments: list[StreamExperiment]) -> float:
+    """Work estimate driving the serial-vs-pooled auto-switch."""
+    return float(sum(e.n_messages * e.points * e.centroids
+                     for e in experiments))
+
+
+def _get_pool(workers: int) -> concurrent.futures.ProcessPoolExecutor:
+    global _pool, _pool_workers
+    with _pool_lock:
+        if _pool is None or _pool_workers < workers:
+            if _pool is not None:
+                _pool.shutdown(wait=False, cancel_futures=True)
+            _pool = concurrent.futures.ProcessPoolExecutor(
+                max_workers=workers, mp_context=_mp_context())
+            _pool_workers = workers
+        return _pool
+
+
+def _reset_pool() -> None:
+    global _pool, _pool_workers
+    with _pool_lock:
+        if _pool is not None:
+            _pool.shutdown(wait=False, cancel_futures=True)
+        _pool = None
+        _pool_workers = 0
+
+
+atexit.register(_reset_pool)
+
+
+def _use_pool(parallel, pending: list[tuple[int, StreamExperiment]]) -> bool:
+    if parallel is False or len(pending) < 2:
+        return False
+    if parallel == "force":
+        return True
+    # True and "auto" both auto-switch: pooling a cheap grid would be a
+    # pessimization, never a win
+    return estimated_cost([exp for _i, exp in pending]) >= PARALLEL_COST_THRESHOLD
+
+
 def run_cells(experiments: list[StreamExperiment], *,
-              metrics: MetricRegistry | None = None, parallel: bool = False,
+              metrics: MetricRegistry | None = None,
+              parallel: bool | str = "auto",
               max_workers: int | None = None,
               cache: ResultCache | str | Path | None = None,
               on_result=None) -> list[ExperimentResult]:
-    """Execute experiment cells, optionally via a process pool and/or cache.
+    """Execute experiment cells via the persistent pool and/or cache.
 
-    Results are returned in input order regardless of completion order, and
-    are bit-identical between serial and parallel execution (each cell's
-    DES is seeded from its own dataclass).  ``on_result(exp, res)`` is
-    invoked as each cell lands (live progress; in parallel mode that is
-    completion order, not input order).
+    ``parallel``: ``"auto"`` (default) and ``True`` pick serial or pooled
+    execution from the grid's estimated work; ``"force"`` always pools;
+    ``False`` never does.  Results are returned in input order regardless
+    of completion order, and are bit-identical between serial and parallel
+    execution (each cell's DES is seeded from its own dataclass).
+    ``on_result(exp, res)`` is invoked as each cell lands (live progress;
+    in pooled mode that is completion order, not input order).  When
+    ``metrics`` is given, serial runs trace into it directly and pooled
+    runs merge back compact per-cell event summaries
+    (``metrics.trace_summary(run_id)``).
     """
     if isinstance(cache, (str, Path)):
         cache = ResultCache(cache)
@@ -175,15 +265,37 @@ def run_cells(experiments: list[StreamExperiment], *,
             notify(exp, hit)
         else:
             pending.append((i, exp))
-    if parallel and len(pending) > 1:
+    if _use_pool(parallel, pending):
         workers = max_workers or min(len(pending), os.cpu_count() or 1)
-        with concurrent.futures.ProcessPoolExecutor(
-                max_workers=workers, mp_context=_mp_context()) as pool:
-            futures = {pool.submit(_run_cell, exp): i for i, exp in pending}
-            for fut in concurrent.futures.as_completed(futures):
-                i = futures[fut]
-                results[i] = fut.result()
-                notify(experiments[i], results[i])
+        # chunked submission: several cells per task bounds IPC round-trips
+        # while leaving enough tasks (~4 per worker) for load balancing
+        chunk = max(1, len(pending) // (workers * 4))
+        chunks = [pending[k:k + chunk] for k in range(0, len(pending), chunk)]
+        for attempt in (1, 2):
+            pool = _get_pool(workers)
+            futures = {pool.submit(_run_cell_chunk, [exp for _i, exp in grp]): grp
+                       for grp in chunks}
+            try:
+                for fut in concurrent.futures.as_completed(futures):
+                    grp = futures[fut]
+                    for (i, exp), (res, summary) in zip(grp, fut.result()):
+                        results[i] = res
+                        if metrics is not None:
+                            metrics.merge_summary(summary)
+                        notify(exp, res)
+                break
+            except concurrent.futures.process.BrokenProcessPool:
+                # a worker died (OOM/kill): restart the pool once and retry
+                # only the cells that never landed — completed cells keep
+                # their results and are not re-notified; cells are pure so
+                # re-running the missing ones is safe
+                _reset_pool()
+                if attempt == 2:
+                    raise
+                done = set(results)
+                chunks = [[(i, exp) for i, exp in grp if i not in done]
+                          for grp in chunks]
+                chunks = [grp for grp in chunks if grp]
     else:
         for i, exp in pending:
             results[i] = run_experiment(
@@ -213,8 +325,11 @@ class ScenarioModel:
 class StreamInsight:
     """Run a design, fit USL per scenario, evaluate prediction quality.
 
-    ``parallel=True`` fans independent cells out over a process pool;
-    ``cache_dir`` memoizes finished cells on disk (see ``ResultCache``).
+    ``parallel`` is forwarded to ``run_cells`` (default ``"auto"``: heavy
+    grids fan out over the persistent process pool, cheap ones run
+    serially); ``cache_dir`` memoizes finished cells on disk (see
+    ``ResultCache``).  Pooled sweeps merge compact per-cell trace
+    summaries into ``self.metrics``.
     """
 
     def __init__(self, metrics: MetricRegistry | None = None,
@@ -227,7 +342,7 @@ class StreamInsight:
 
     # -- execution -----------------------------------------------------------
     def run(self, design: ExperimentDesign, verbose: bool = False,
-            parallel: bool = False) -> list[ExperimentResult]:
+            parallel: bool | str = "auto") -> list[ExperimentResult]:
         exps = design.experiments()
 
         def progress(exp, res):

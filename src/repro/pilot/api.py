@@ -50,7 +50,12 @@ class State(enum.Enum):
 
     @property
     def is_final(self) -> bool:
-        return self in (State.DONE, State.FAILED, State.CANCELED)
+        return self in _FINAL_STATES
+
+
+# frozenset membership (identity hash) beats rebuilding a tuple of members
+# on every is_final call — the engine checks finality per event
+_FINAL_STATES = frozenset((State.DONE, State.FAILED, State.CANCELED))
 
 
 @dataclass(frozen=True)
@@ -102,7 +107,7 @@ class PilotDescription:
         return self.resource.split("://", 1)[0]
 
 
-@dataclass
+@dataclass(slots=True)
 class ComputeUnitDescription:
     """A self-contained task: a real callable and/or a cost profile."""
 
@@ -116,7 +121,14 @@ class ComputeUnitDescription:
 
 
 class ComputeUnit:
-    """Handle for a submitted task."""
+    """Handle for a submitted task.
+
+    ``__slots__``: the streaming engine mints one per micro-batch, so the
+    per-instance ``__dict__`` was measurable across a sweep."""
+
+    __slots__ = ("desc", "uid", "pilot", "state", "result_value", "exception",
+                 "submit_ts", "start_ts", "end_ts", "_done", "callbacks",
+                 "attrs")
 
     def __init__(self, desc: ComputeUnitDescription, uid: int, pilot: "Pilot") -> None:
         self.desc = desc
@@ -128,8 +140,21 @@ class ComputeUnit:
         self.submit_ts: float = 0.0
         self.start_ts: float = 0.0
         self.end_ts: float = 0.0
-        self._done = threading.Event()
+        # lazily created: nothing blocks on it in the simulated backends,
+        # and the mini-app creates one CU per micro-batch — a kernel-backed
+        # Event per CU was pure allocation overhead on the hot path
+        self._done: threading.Event | None = None
         self.callbacks: list = []   # fn(cu) invoked once, on any final state
+        self.attrs: dict = {}       # backend-set placement info (container/worker)
+
+    @property
+    def done_event(self) -> threading.Event:
+        """Event set on any final state (created on first access)."""
+        if self._done is None:
+            self._done = threading.Event()
+            if self.state.is_final:
+                self._done.set()
+        return self._done
 
     def add_done_callback(self, fn) -> None:
         if self.state.is_final:
@@ -151,20 +176,23 @@ class ComputeUnit:
         self.state = State.DONE
         self.end_ts = ts
         self.result_value = result
-        self._done.set()
+        if self._done is not None:
+            self._done.set()
         self._fire_callbacks()
 
     def _set_failed(self, ts: float, exc: BaseException) -> None:
         self.state = State.FAILED
         self.end_ts = ts
         self.exception = exc
-        self._done.set()
+        if self._done is not None:
+            self._done.set()
         self._fire_callbacks()
 
     def _set_canceled(self, ts: float) -> None:
         self.state = State.CANCELED
         self.end_ts = ts
-        self._done.set()
+        if self._done is not None:
+            self._done.set()
         self._fire_callbacks()
 
     # -- user API ------------------------------------------------------------
@@ -230,6 +258,15 @@ class Backend:
 
     def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
         raise NotImplementedError
+
+    def shared_resource(self, pilot: Pilot, name: str):
+        """Public accessor for a pilot's named shared resource (e.g. the HPC
+        backend's ``"fs"`` Lustre ``SharedResource``).  Backends without
+        shared infrastructure raise ``LookupError`` — e.g. serverless
+        containers are isolated by construction (that isolation is what
+        makes sigma, kappa ≈ 0 emerge in the USL fit)."""
+        raise LookupError(
+            f"backend {self.scheme!r} exposes no shared resource {name!r}")
 
     def cancel_pilot(self, pilot: Pilot) -> None:
         pass

@@ -1,7 +1,28 @@
 # Importing this package registers all built-in backend plugins.
+#
+# The jax mesh backend is registered *lazily*: importing jax costs over a
+# second of wall time, which used to land inside the first simulated cell's
+# measurement (the serverless reference cell in perf_smoke paid ~1.1 s of
+# jax import it never used).  The simulation backends import eagerly; the
+# "jax" scheme resolves to a factory that imports jaxmesh on first use.
+from repro.pilot.api import register_backend
+from repro.pilot.backends.hpcsim import HpcSimBackend
 from repro.pilot.backends.local import LocalBackend
 from repro.pilot.backends.serverless import ServerlessSimBackend
-from repro.pilot.backends.hpcsim import HpcSimBackend
-from repro.pilot.backends.jaxmesh import JaxMeshBackend
 
 __all__ = ["LocalBackend", "ServerlessSimBackend", "HpcSimBackend", "JaxMeshBackend"]
+
+
+def _jaxmesh_factory(**kwargs):
+    from repro.pilot.backends.jaxmesh import JaxMeshBackend
+    return JaxMeshBackend(**kwargs)
+
+
+register_backend("jax", _jaxmesh_factory)
+
+
+def __getattr__(name):
+    if name == "JaxMeshBackend":
+        from repro.pilot.backends.jaxmesh import JaxMeshBackend
+        return JaxMeshBackend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -97,6 +97,17 @@ class HpcSimBackend(Backend):
             if not cu.state.is_final:
                 cu._set_canceled(self.sim.now)
 
+    _SHARED_RESOURCES = ("fs", "model_lock")
+
+    def shared_resource(self, pilot: Pilot, name: str):
+        """Public accessor for the pilot's shared infrastructure: ``"fs"``
+        (the Lustre ``SharedResource``) or ``"model_lock"`` (the shared-model
+        ``SimLock``)."""
+        if name not in self._SHARED_RESOURCES:
+            raise LookupError(
+                f"hpc backend exposes {self._SHARED_RESOURCES}, not {name!r}")
+        return self._pilots[pilot.uid][name]
+
     # -- failure injection ------------------------------------------------
     def kill_worker(self, pilot: Pilot, wid: int) -> list[ComputeUnit]:
         """Simulate a node failure: fail the running CU, drop queued ones."""
@@ -136,21 +147,23 @@ class HpcSimBackend(Backend):
                 self._assign(pilot, cu)
             self._pump_scheduler(pilot)
 
-        self.sim.schedule(st["cfg"]["dispatch_s"], dispatched)
+        self.sim.schedule_fast(st["cfg"]["dispatch_s"], dispatched)
 
     def _assign(self, pilot: Pilot, cu: ComputeUnit) -> None:
         st = self._pilots[pilot.uid]
-        alive = [w for w in st["workers"] if w.alive]
-        if not alive:
-            cu._set_failed(self.sim.now, ConnectionError("no alive workers"))
-            return
+        workers = st["workers"]
         if cu.desc.partition is not None:
-            w = st["workers"][cu.desc.partition % len(st["workers"])]
+            # pinned: no need to materialize the alive-worker list per task
+            w = workers[cu.desc.partition % len(workers)]
             if not w.alive:
                 cu._set_failed(self.sim.now, ConnectionError(
                     f"worker {w.wid} for partition {cu.desc.partition} is dead"))
                 return
         else:
+            alive = [w for w in workers if w.alive]
+            if not alive:
+                cu._set_failed(self.sim.now, ConnectionError("no alive workers"))
+                return
             w = min(alive, key=lambda w: (len(w.queue) + (1 if w.busy else 0), w.wid))
         w.queue.append(cu)
         self._pump_worker(pilot, w)
@@ -164,12 +177,9 @@ class HpcSimBackend(Backend):
             self._pump_worker(pilot, w)
             return
         st = self._pilots[pilot.uid]
-        cfg = st["cfg"]
         w.busy = True
         cu._set_running(self.sim.now)
         cu.attrs = {"worker": w.wid}
-        p = cu.desc.profile or TaskProfile()
-
         # phase 1: pull message from the broker log (shared FS resident) and
         #          read the current model from the shared FS
         # phase 2: parallel compute — the distance phase (private cores)
@@ -178,56 +188,77 @@ class HpcSimBackend(Backend):
         #          delta (coherence — metadata + bytes, both on the shared
         #          FS), merge (serial_flops), write back, release.
         #          Constant lock-hold → sigma; (N-1)-growing hold → kappa.
-        n_peers = p.coherence_peers
-        fs: SharedResource = st["fs"]
-        lock: SimLock = st["model_lock"]
-        coher_bytes = n_peers * max(p.write_bytes, 1.0) * cfg["coherence_delta_frac"]
-
-        def phase_compute() -> None:
-            t = p.flops / cfg["flops_per_core"]
-            t = self.sim.lognormal_jitter(t, cfg["jitter_cv"])
-            self.sim.schedule(t, phase_model_update)
-
-        def phase_model_update() -> None:
-            lock.acquire(in_critical_section)
-
-        def in_critical_section() -> None:
-            meta = n_peers * cfg["fs_meta_latency"]
-            merge = p.serial_flops / cfg["flops_per_core"]
-            hold = self.sim.lognormal_jitter(meta + merge, cfg["jitter_cv"])
-
-            def do_io() -> None:
-                fs.submit(p.write_bytes + coher_bytes, unlock)
-
-            self.sim.schedule(hold, do_io)
-
-        def unlock() -> None:
-            lock.release()
-            finish()
-
-        def finish() -> None:
-            if not w.alive:
-                return  # kill_worker already failed the CU
-            w.busy = False
-            if not cu.state.is_final:
-                result = None
-                if cu.desc.func is not None:
-                    try:
-                        result = cu.desc.func(*cu.desc.args, **cu.desc.kwargs)
-                    except BaseException as exc:  # noqa: BLE001
-                        cu._set_failed(self.sim.now, exc)
-                        self._pump_worker(pilot, w)
-                        return
-                cu._set_done(self.sim.now, result)
-            self._pump_worker(pilot, w)
-
-        fs.submit(p.msg_bytes + p.read_bytes, phase_compute)
+        task = _TaskExec(self, pilot, w, cu, st)
+        st["fs"].submit(task.p.msg_bytes + task.p.read_bytes, task.phase_compute)
 
     def drive_until(self, predicate, timeout) -> None:
         self.sim.run_until(t=None if timeout is None else self.sim.now + timeout,
                            predicate=predicate)
         if not predicate():
             raise TimeoutError("hpc sim drive_until exhausted events/timeout")
+
+
+class _TaskExec:
+    """Per-task phase chain, one ``__slots__`` object with bound-method
+    continuations instead of a fresh stack of closures per task (the
+    mini-app pushes hundreds of tasks per cell through this path)."""
+
+    __slots__ = ("backend", "pilot", "w", "cu", "st", "cfg", "p", "n_peers",
+                 "coher_bytes")
+
+    def __init__(self, backend: HpcSimBackend, pilot: Pilot, w: _Worker,
+                 cu: ComputeUnit, st: dict) -> None:
+        self.backend = backend
+        self.pilot = pilot
+        self.w = w
+        self.cu = cu
+        self.st = st
+        self.cfg = st["cfg"]
+        self.p = cu.desc.profile or TaskProfile()
+        self.n_peers = self.p.coherence_peers
+        self.coher_bytes = (self.n_peers * max(self.p.write_bytes, 1.0)
+                            * self.cfg["coherence_delta_frac"])
+
+    def phase_compute(self) -> None:
+        sim = self.backend.sim
+        t = self.p.flops / self.cfg["flops_per_core"]
+        sim.schedule_fast(sim.lognormal_jitter(t, self.cfg["jitter_cv"]),
+                          self.phase_model_update)
+
+    def phase_model_update(self) -> None:
+        self.st["model_lock"].acquire(self.in_critical_section)
+
+    def in_critical_section(self) -> None:
+        sim = self.backend.sim
+        meta = self.n_peers * self.cfg["fs_meta_latency"]
+        merge = self.p.serial_flops / self.cfg["flops_per_core"]
+        sim.schedule_fast(sim.lognormal_jitter(meta + merge,
+                                               self.cfg["jitter_cv"]),
+                          self.do_io)
+
+    def do_io(self) -> None:
+        self.st["fs"].submit(self.p.write_bytes + self.coher_bytes, self.unlock)
+
+    def unlock(self) -> None:
+        self.st["model_lock"].release()
+        self.finish()
+
+    def finish(self) -> None:
+        backend, w, cu = self.backend, self.w, self.cu
+        if not w.alive:
+            return  # kill_worker already failed the CU
+        w.busy = False
+        if not cu.state.is_final:
+            result = None
+            if cu.desc.func is not None:
+                try:
+                    result = cu.desc.func(*cu.desc.args, **cu.desc.kwargs)
+                except BaseException as exc:  # noqa: BLE001
+                    cu._set_failed(backend.sim.now, exc)
+                    backend._pump_worker(self.pilot, w)
+                    return
+            cu._set_done(backend.sim.now, result)
+        backend._pump_worker(self.pilot, w)
 
 
 register_backend("hpc", HpcSimBackend)

@@ -76,9 +76,18 @@ class ServerlessSimBackend(Backend):
             pilot.desc.concurrency or pilot.desc.partitions,
             int(cfg["max_containers"]),
         )
+        containers = [_Container(i) for i in range(max(1, n_containers))]
         self._pilots[pilot.uid] = {
             "cfg": cfg,
-            "containers": [_Container(i) for i in range(max(1, n_containers))],
+            "containers": containers,
+            # idle pool: popleft/appendleft beats rescanning every
+            # container's busy flag per dispatch.  Seeded in cid order
+            # (first-round cold starts match the scan it replaces) and
+            # freed containers return to the HEAD, so the most recently
+            # warmed container is reused first — sequential demand pays
+            # one cold start, like the lowest-cid scan did, instead of
+            # round-robining the whole pool cold
+            "free": deque(containers),
             "queue": deque(),
         }
         pilot.state = State.RUNNING
@@ -97,18 +106,23 @@ class ServerlessSimBackend(Backend):
         cu.state = State.PENDING
         st = self._pilots[pilot.uid]
         st["queue"].append(cu)
-        self.sim.schedule(0.0, lambda: self._dispatch(pilot))
+        # dispatch synchronously: invocation latency is modeled inside
+        # service_time (invoke_overhead_s), so the zero-delay hop event the
+        # seed scheduled here bought nothing but heap traffic.  Completion
+        # is always a future event, so callers attach done-callbacks before
+        # any completion can fire.
+        self._dispatch(pilot)
 
     def _dispatch(self, pilot: Pilot) -> None:
         st = self._pilots[pilot.uid]
-        while st["queue"]:
-            free = next((c for c in st["containers"] if not c.busy), None)
-            if free is None:
+        queue, free_pool = st["queue"], st["free"]
+        while queue:
+            if not free_pool:
                 return
-            cu = st["queue"].popleft()
+            cu = queue.popleft()
             if cu.state.is_final:
                 continue
-            self._start(pilot, cu, free)
+            self._start(pilot, cu, free_pool.popleft())
 
     def service_time(self, cfg: dict, memory_mb: float, profile: TaskProfile,
                      cold: bool) -> float:
@@ -139,6 +153,7 @@ class ServerlessSimBackend(Backend):
         cfg = st["cfg"]
         profile = cu.desc.profile or TaskProfile()
         if profile.memory_mb > min(pilot.desc.memory_mb, cfg["memory_cap_mb"]):
+            st["free"].appendleft(container)   # never started: back in the pool
             cu._set_failed(self.sim.now, MemoryError(
                 f"task working set {profile.memory_mb} MB exceeds container "
                 f"{pilot.desc.memory_mb} MB"))
@@ -152,6 +167,7 @@ class ServerlessSimBackend(Backend):
 
         def finish() -> None:
             container.busy = False
+            st["free"].appendleft(container)
             if dt > pilot.desc.walltime_s:
                 cu._set_failed(self.sim.now, TimeoutError(
                     f"walltime {pilot.desc.walltime_s}s exceeded (needed {dt:.1f}s)"))
@@ -167,7 +183,7 @@ class ServerlessSimBackend(Backend):
                 cu._set_done(self.sim.now, result)
             self._dispatch(pilot)
 
-        self.sim.schedule(min(dt, pilot.desc.walltime_s), finish)
+        self.sim.schedule_fast(min(dt, pilot.desc.walltime_s), finish)
 
     def drive_until(self, predicate, timeout) -> None:
         self.sim.run_until(t=None if timeout is None else self.sim.now + timeout,

@@ -33,7 +33,7 @@ from __future__ import annotations
 import threading
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 __all__ = ["Message", "Broker", "stable_hash"]
 
@@ -49,8 +49,11 @@ def stable_hash(key: Any) -> int:
     return zlib.crc32(data)
 
 
-@dataclass(frozen=True)
-class Message:
+class Message(NamedTuple):
+    """Immutable broker record.  A NamedTuple, not a frozen dataclass: the
+    broker mints one per append on the simulation hot path, and frozen
+    dataclasses pay an ``object.__setattr__`` per field at construction."""
+
     topic: str
     partition: int
     offset: int
@@ -74,6 +77,10 @@ class Broker:
         self._rr: dict[str, int] = {}
         self._subs: dict[str, list[Callable[[Message], None]]] = {}
         self._lock = threading.RLock()
+        # incrementally maintained so lag() is O(1): the producer's AIMD
+        # controller reads it once per produced message
+        self._appended_total: dict[str, int] = {}
+        self._committed_total: dict[tuple[str, str], int] = {}
 
     # -- topic admin -------------------------------------------------------
     def create_topic(self, name: str, partitions: int) -> None:
@@ -84,6 +91,7 @@ class Broker:
                 raise ValueError("partitions must be >= 1")
             self._topics[name] = [_Partition() for _ in range(partitions)]
             self._rr[name] = 0
+            self._appended_total[name] = 0
 
     def num_partitions(self, topic: str) -> int:
         return len(self._topics[topic])
@@ -122,6 +130,7 @@ class Broker:
             msg = Message(topic, partition, len(part.log), ts, key, value,
                           run_id, msg_id, size_bytes)
             part.log.append(msg)
+            self._appended_total[topic] += 1
             subs = list(self._subs.get(topic, ()))
         for fn in subs:
             fn(msg)
@@ -142,7 +151,12 @@ class Broker:
         """Commit ``offset`` = next offset to read (Kafka semantics)."""
         with self._lock:
             key = (group, topic, partition)
-            self._commits[key] = max(self._commits.get(key, 0), offset)
+            old = self._commits.get(key, 0)
+            if offset > old:
+                self._commits[key] = offset
+                gt = (group, topic)
+                self._committed_total[gt] = self._committed_total.get(gt, 0) \
+                    + (offset - old)
 
     def committed(self, group: str, topic: str, partition: int) -> int:
         with self._lock:
@@ -150,12 +164,15 @@ class Broker:
 
     # -- backpressure signal ------------------------------------------------
     def lag(self, group: str, topic: str) -> int:
-        """Total appended-but-uncommitted messages across partitions."""
+        """Total appended-but-uncommitted messages across partitions.
+
+        O(1) from incrementally maintained totals — the producer's AIMD
+        controller calls this once per produced message, so the seed's
+        per-partition scan (re-taking the lock per partition) sat directly
+        on the simulation hot path."""
         with self._lock:
-            total = 0
-            for p in range(len(self._topics[topic])):
-                total += len(self._topics[topic][p].log) - self.committed(group, topic, p)
-            return total
+            return (self._appended_total[topic]
+                    - self._committed_total.get((group, topic), 0))
 
     def total_messages(self, topic: str) -> int:
         with self._lock:

@@ -60,8 +60,8 @@ class PartitionIngest:
 
     def submit(self, partition: int, size_bytes: int, on_done: Callable[[], None]) -> None:
         res = self.resources[partition % len(self.resources)]
-        self.sim.schedule(self.request_latency,
-                          lambda: res.submit(float(size_bytes), on_done))
+        self.sim.schedule_fast(self.request_latency,
+                               lambda: res.submit(float(size_bytes), on_done))
 
 
 class SharedFsIngest:
@@ -73,8 +73,8 @@ class SharedFsIngest:
         self.request_latency = request_latency
 
     def submit(self, partition: int, size_bytes: int, on_done: Callable[[], None]) -> None:
-        self.sim.schedule(self.request_latency,
-                          lambda: self.fs.submit(float(size_bytes), on_done))
+        self.sim.schedule_fast(self.request_latency,
+                               lambda: self.fs.submit(float(size_bytes), on_done))
 
 
 class _ImmediateIngest:
@@ -115,9 +115,11 @@ class SyntheticProducer:
         self.sent = 0
         self.appended = 0
         self.done = False
+        self._rec_produce = metrics.recorder(run_id, "producer", "produce")
+        self._rec_append = metrics.recorder(run_id, "broker", "append")
 
     def start(self) -> None:
-        self.sim.schedule(0.0, self._tick)
+        self.sim.schedule_fast(0.0, self._tick)
 
     def _tick(self) -> None:
         if self.sent >= self.n_messages:
@@ -128,20 +130,20 @@ class SyntheticProducer:
         msg_id = f"{self.run_id}/{i}"
         partition = self.broker.partition_for(self.topic, key) if key is not None \
             else i % self.broker.num_partitions(self.topic)
-        self.metrics.record(self.run_id, "producer", "produce", self.sim.now,
-                            msg_id=msg_id, size=size, partition=partition)
+        self._rec_produce(self.sim.now, msg_id=msg_id, size=size,
+                          partition=partition)
 
         def appended() -> None:
             self.broker.append(self.topic, value, ts=self.sim.now, key=key,
                                partition=partition, run_id=self.run_id,
                                msg_id=msg_id, size_bytes=size)
             self.appended += 1
-            self.metrics.record(self.run_id, "broker", "append", self.sim.now,
-                                msg_id=msg_id, size=size, partition=partition)
+            self._rec_append(self.sim.now, msg_id=msg_id, size=size,
+                             partition=partition)
             if self.appended >= self.n_messages:
                 self.done = True
 
         self.ingest.submit(partition, size, appended)
 
         rate = self.aimd.update(self.broker.lag(self.group, self.topic))
-        self.sim.schedule(1.0 / rate, self._tick)
+        self.sim.schedule_fast(1.0 / rate, self._tick)

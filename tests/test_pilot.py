@@ -179,6 +179,26 @@ def test_unknown_machine_rejected():
         pcs.submit_pilot(PilotDescription(resource="hpc://frontier-sim"))
 
 
+def test_shared_resource_public_accessor():
+    """backend.shared_resource(pilot, name) replaces reaching into
+    backend._pilots[...]: HPC exposes the Lustre resource and the model
+    lock; isolated backends raise LookupError."""
+    from repro.sim.des import SharedResource, SimLock
+
+    pcs = make_service()
+    hpc = pcs.submit_pilot(PilotDescription(resource="hpc://wrangler-sim",
+                                            partitions=2))
+    assert isinstance(hpc.backend.shared_resource(hpc, "fs"), SharedResource)
+    assert isinstance(hpc.backend.shared_resource(hpc, "model_lock"), SimLock)
+    with pytest.raises(LookupError):
+        hpc.backend.shared_resource(hpc, "gpfs")
+
+    sls = pcs.submit_pilot(PilotDescription(resource="serverless://aws-sim",
+                                            partitions=2))
+    with pytest.raises(LookupError):
+        sls.backend.shared_resource(sls, "fs")
+
+
 # -- jaxmesh backend -------------------------------------------------------------
 
 def test_jaxmesh_pilot_runs_under_mesh():

@@ -1,10 +1,15 @@
 """Parallel experiment runner, result cache, and grid axes (StreamInsight)."""
 
+import dataclasses
+import json
+
 import pytest
 
+from repro.core.metrics import MetricRegistry
 from repro.core.miniapp import StreamExperiment, run_experiment
-from repro.core.streaminsight import (ExperimentDesign, ResultCache,
-                                      StreamInsight, run_cells)
+from repro.core.streaminsight import (PARALLEL_COST_THRESHOLD, _RESULT_FIELDS,
+                                      ExperimentDesign, ResultCache,
+                                      StreamInsight, estimated_cost, run_cells)
 
 
 def small_design(**kw):
@@ -15,11 +20,14 @@ def small_design(**kw):
 
 
 def test_parallel_runner_bit_identical_to_serial():
-    """Cells carry their own seed, so pool execution changes nothing."""
+    """Cells carry their own seed, so pool execution changes nothing.
+
+    ``parallel="force"`` pins the pool path: a small design would
+    auto-switch to serial and the test would stop covering the pool."""
     serial = StreamInsight()
-    serial.run(small_design())
+    serial.run(small_design(), parallel=False)
     pooled = StreamInsight()
-    pooled.run(small_design(), parallel=True)
+    pooled.run(small_design(), parallel="force")
     assert serial.records() == pooled.records()
     fits_s = [(m.fit.sigma, m.fit.kappa, m.fit.gamma)
               for m in serial.fit_models()]
@@ -31,8 +39,45 @@ def test_parallel_runner_bit_identical_to_serial():
 def test_run_cells_preserves_input_order():
     cells = [StreamExperiment(machine="serverless", partitions=n,
                               n_messages=12, seed=0) for n in (4, 1, 2)]
-    results = run_cells(cells, parallel=True)
+    results = run_cells(cells, parallel="force")
     assert [r.experiment.partitions for r in results] == [4, 1, 2]
+
+
+def test_auto_switch_runs_cheap_grids_serially(monkeypatch):
+    """parallel=True on a cheap grid must not touch the process pool."""
+    import repro.core.streaminsight as si
+
+    cells = [StreamExperiment(machine="serverless", partitions=n,
+                              n_messages=12, seed=0) for n in (1, 2)]
+    assert estimated_cost(cells) < PARALLEL_COST_THRESHOLD
+
+    def boom(workers):
+        raise AssertionError("auto-switch leaked a cheap grid into the pool")
+
+    monkeypatch.setattr(si, "_get_pool", boom)
+    results = run_cells(cells, parallel=True)
+    assert [r.experiment.partitions for r in results] == [1, 2]
+    # a grid past the threshold must take the pool branch
+    heavy = [dataclasses.replace(c, n_messages=10_000_000) for c in cells]
+    assert estimated_cost(heavy) >= PARALLEL_COST_THRESHOLD
+    with pytest.raises(AssertionError, match="leaked"):
+        run_cells(heavy, parallel=True)
+
+
+def test_pooled_run_merges_trace_summaries():
+    """The compact return channel: pooled cells surface per-(component,
+    kind) event summaries in the caller's registry."""
+    cells = [StreamExperiment(machine="serverless", partitions=n,
+                              n_messages=12, seed=0) for n in (1, 2)]
+    reg = MetricRegistry()
+    results = run_cells(cells, parallel="force", metrics=reg)
+    for res in results:
+        summary = reg.trace_summary(res.run_id)
+        assert summary, f"no merged summary for {res.run_id}"
+        assert summary["engine/complete"][0] == 12
+        counts_ok = all(len(v) == 3 and v[1] <= v[2] for v in summary.values())
+        assert counts_ok
+    assert set(reg.run_ids()) >= {r.run_id for r in results}
 
 
 def test_result_cache_serves_rerun_without_executing(tmp_path, monkeypatch):
@@ -68,6 +113,65 @@ def test_result_cache_key_covers_all_fields(tmp_path):
                              policy="update_locked"),
     ):
         assert cache.get(changed) is None, changed
+
+
+def test_result_cache_corrupt_and_stale_entries_fall_through(tmp_path):
+    exp = StreamExperiment(machine="serverless", partitions=2, n_messages=12)
+    cache = ResultCache(tmp_path)
+    res = run_experiment(exp)
+    cache.put(exp, res)
+    assert cache.get(exp) is not None
+
+    # corrupt JSON → treated as a miss, never an exception
+    cache.path(exp).write_text("{not json")
+    assert cache.get(exp) is None
+
+    # stale schema (missing result fields) → miss
+    cache.path(exp).write_text(json.dumps(
+        {"experiment": dataclasses.asdict(exp)}))
+    assert cache.get(exp) is None
+
+    # wrong experiment kwargs (e.g. a renamed field) → miss
+    doc = {"experiment": {"bogus_field": 1}}
+    doc.update({k: getattr(res, k) for k in _RESULT_FIELDS})
+    cache.path(exp).write_text(json.dumps(doc))
+    assert cache.get(exp) is None
+
+    # a fresh put repairs the entry and serves again
+    cache.put(exp, res)
+    assert cache.get(exp).throughput == res.throughput
+
+
+def test_result_cache_put_roundtrips_all_result_fields(tmp_path):
+    exp = StreamExperiment(machine="wrangler", partitions=2, n_messages=12)
+    cache = ResultCache(tmp_path)
+    res = run_experiment(exp)
+    cache.put(exp, res)
+    got = cache.get(exp)
+    assert got is not None
+    for field_name in _RESULT_FIELDS:
+        assert getattr(got, field_name) == getattr(res, field_name), field_name
+    assert got.experiment == exp
+
+
+def test_run_cells_mixed_cache_hits_preserve_order(tmp_path):
+    """Interleaved cache hits and live (pooled) runs land in input order."""
+    cells = [StreamExperiment(machine="serverless", partitions=n,
+                              n_messages=12, seed=0) for n in (4, 1, 3, 2)]
+    cache = ResultCache(tmp_path)
+    # pre-warm only the middle two cells
+    for exp in cells[1:3]:
+        cache.put(exp, run_experiment(exp))
+    seen = []
+    results = run_cells(cells, parallel="force", cache=cache,
+                        on_result=lambda exp, res: seen.append(exp.partitions))
+    assert [r.experiment.partitions for r in results] == [4, 1, 3, 2]
+    assert sorted(seen) == [1, 2, 3, 4]          # every cell notified once
+    # the two misses are now cached too
+    assert all(cache.get(exp) is not None for exp in cells)
+    # and a rerun is bit-identical
+    rerun = run_cells(cells, parallel=False)
+    assert [r.throughput for r in rerun] == [r.throughput for r in results]
 
 
 def test_policy_and_batch_max_are_grid_axes():
