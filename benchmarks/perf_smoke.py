@@ -1,4 +1,4 @@
-"""Perf smoke: simulation hot-path cost tracking across PRs (pre-merge gate).
+"""Perf smoke: simulation + modeling hot-path cost tracking (pre-merge gate).
 
 Runs the reference experiment cells (N=8 partitions, 200 messages — the
 cell the push-based-engine acceptance criterion is stated against) on both
@@ -16,6 +16,17 @@ so it works as a CI/pre-merge perf gate:
   runs cheap grids serially and only pools heavy ones.
 * ``bit_identical`` — serial and pooled results must match exactly.
 
+The modeling loop has its own section, written to ``BENCH_usl.json``:
+
+* ``usl speedup_x`` — one ``fit_usl_batch`` over ``USL_SCENARIOS``
+  synthetic scenarios must run ≥10x faster than the per-scenario scalar
+  ``fit_usl`` loop.
+* ``usl sse_rel_excess`` — every batched fit must match its scalar fit
+  within 1e-6 SSE-relative tolerance (they share one code path; this
+  gate catches any drift between the two).
+* the jax backend's cold (compile) and warm walls are recorded for
+  information, not gated — CPU float32 jit is an option, not the default.
+
     PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 
@@ -27,8 +38,11 @@ import sys
 import time
 from pathlib import Path
 
+import numpy as np
+
 from repro.core.miniapp import StreamExperiment, run_experiment
 from repro.core.streaminsight import run_cells
+from repro.core.usl import fit_usl, fit_usl_batch, usl_throughput
 
 # Seed (polling-engine) event counts for the reference cells, recorded
 # before the push-based refactor; the gate enforces we never regress to
@@ -48,6 +62,13 @@ SPEEDUP_GATE_X = 0.95
 REPEATS = 9
 
 OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+
+# -- batched USL fitting gate -------------------------------------------------
+USL_SCENARIOS = 256
+USL_NS = np.array([1, 2, 3, 4, 6, 8, 12, 16], dtype=np.float64)
+USL_SPEEDUP_GATE_X = 10.0
+USL_SSE_RTOL = 1e-6
+USL_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_usl.json"
 
 
 def reference_cell(machine: str) -> StreamExperiment:
@@ -117,6 +138,82 @@ def run() -> dict:
     return report
 
 
+def synth_usl_scenarios(s: int = USL_SCENARIOS, seed: int = 11):
+    """S synthetic (sigma, kappa, gamma) scenarios sampled across the
+    paper's regimes (near-ideal Lambda through retrograde Dask), with
+    multiplicative lognormal measurement noise."""
+    rng = np.random.default_rng(seed)
+    sigma = rng.uniform(0.01, 0.6, s)
+    kappa = 10.0 ** rng.uniform(-5.0, -2.0, s)
+    gamma = rng.uniform(0.5, 20.0, s)
+    t = usl_throughput(USL_NS[None, :], sigma[:, None], kappa[:, None],
+                       gamma[:, None])
+    t = t * rng.lognormal(0.0, 0.05, t.shape)
+    return np.broadcast_to(USL_NS, (s, USL_NS.size)), t
+
+
+def run_usl() -> dict:
+    """Batched-vs-scalar USL fitting: wall clocks, agreement, jax backend."""
+    n_mat, t_mat = synth_usl_scenarios()
+    s = n_mat.shape[0]
+
+    def run_scalar():
+        return [fit_usl(USL_NS, t_mat[i]) for i in range(s)]
+
+    # warm both paths (allocator, caches) before timing
+    _ = fit_usl(USL_NS, t_mat[0])
+    batch_fits = fit_usl_batch(n_mat, t_mat)
+    scalar_fits = run_scalar()
+    wall_scalar = _best_wall(run_scalar, repeats=3)
+    wall_batch = _best_wall(lambda: fit_usl_batch(n_mat, t_mat), repeats=5)
+
+    def sse(fit, i):
+        r = fit.predict(USL_NS) - t_mat[i]
+        return float(np.dot(r, r))
+
+    sse_s = np.array([sse(f, i) for i, f in enumerate(scalar_fits)])
+    sse_b = np.array([sse(f, i) for i, f in enumerate(batch_fits)])
+    sse_rel_excess = float(np.max((sse_b - sse_s) / np.maximum(sse_s, 1e-30)))
+    max_param_diff = float(max(
+        max(abs(a.sigma - b.sigma), abs(a.kappa - b.kappa),
+            abs(a.gamma - b.gamma))
+        for a, b in zip(scalar_fits, batch_fits)))
+
+    jax_info: dict = {}
+    try:
+        t0 = time.perf_counter()
+        fit_usl_batch(n_mat, t_mat, backend="jax")
+        cold = time.perf_counter() - t0
+        warm = _best_wall(lambda: fit_usl_batch(n_mat, t_mat, backend="jax"),
+                          repeats=3)
+        jax_info = {"wall_cold_s": round(cold, 3),
+                    "wall_warm_s": round(warm, 4)}
+    except Exception as exc:   # jax optional: numpy path is the product
+        jax_info = {"error": repr(exc)}
+
+    return {
+        "scenarios": s,
+        "points_per_scenario": int(USL_NS.size),
+        "wall_scalar_s": round(wall_scalar, 4),
+        "wall_batch_s": round(wall_batch, 4),
+        "speedup_x": round(wall_scalar / max(wall_batch, 1e-9), 1),
+        "sse_rel_excess": sse_rel_excess,
+        "max_param_diff": max_param_diff,
+        "jax": jax_info,
+    }
+
+
+def usl_gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
+    return [
+        ("usl", "speedup_x", "1",
+         f"{report['speedup_x']:g}", f">={USL_SPEEDUP_GATE_X:g}x",
+         report["speedup_x"] >= USL_SPEEDUP_GATE_X),
+        ("usl", "sse_rel_exc", "-",
+         f"{report['sse_rel_excess']:.1e}", f"<={USL_SSE_RTOL:g}",
+         report["sse_rel_excess"] <= USL_SSE_RTOL),
+    ]
+
+
 def gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
     """(scope, metric, before, after, gate, ok) rows for every hard gate."""
     rows = []
@@ -139,9 +236,11 @@ def gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
 def main() -> None:
     report = run()
     OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
-    rows = gates(report)
+    usl_report = run_usl()
+    USL_OUT_PATH.write_text(json.dumps(usl_report, indent=2) + "\n")
+    rows = gates(report) + usl_gates(usl_report)
     width = (12, 14, 10, 10, 8)
-    print(f"perf_smoke: wrote {OUT_PATH.name}")
+    print(f"perf_smoke: wrote {OUT_PATH.name} and {USL_OUT_PATH.name}")
     print("  scope        metric         before     after      gate      result")
     failed = False
     for scope, metric, before, after, gate, ok in rows:

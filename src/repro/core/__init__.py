@@ -1,3 +1,5 @@
-from repro.core.usl import USLFit, fit_usl, usl_throughput, r_squared, rmse
+from repro.core.usl import (USLFit, fit_usl, fit_usl_batch, fit_usl_ragged,
+                            usl_throughput, r_squared, rmse)
 
-__all__ = ["USLFit", "fit_usl", "usl_throughput", "r_squared", "rmse"]
+__all__ = ["USLFit", "fit_usl", "fit_usl_batch", "fit_usl_ragged",
+           "usl_throughput", "r_squared", "rmse"]

@@ -8,6 +8,17 @@ Streaming Mini-App, USL model fitting per scenario, and model evaluation on
 unseen configurations (train/test split, RMSE vs number of training
 configurations — Fig 7).
 
+The modeling loop is batched end-to-end: ``fit_models`` stacks every
+scenario group into one ``fit_usl_batch`` call (vectorized grid seed +
+batched Levenberg–Marquardt; see ``repro.core.usl``), and ``evaluate``
+accepts a *list* of training-set sizes, building the full
+``(n_train_configs × scenario)`` train-split matrix and fitting it in a
+single batch — thousands of scenario models cost one vectorized pass
+instead of a Python loop of scalar fits.  ``bootstrap=B`` threads through
+to percentile confidence intervals for (sigma, kappa, peak_N), which are
+just B more rows in the same batch, and ``backend="jax"`` routes the fits
+through the jit+vmap LM path for very large sweeps.
+
 Execution model: every ``StreamExperiment`` cell builds its own
 ``PilotComputeService`` / ``Simulator`` seeded by ``exp.seed``, so cells are
 fully independent — like Pilot-Streaming's independently managed resource
@@ -56,7 +67,7 @@ import numpy as np
 
 from repro.core.metrics import MetricRegistry
 from repro.core.miniapp import ExperimentResult, StreamExperiment, run_experiment
-from repro.core.usl import USLFit, fit_usl, rmse
+from repro.core.usl import USLFit, fit_usl_batch, fit_usl_ragged, rmse
 
 __all__ = ["ExperimentDesign", "ScenarioModel", "StreamInsight", "ResultCache",
            "run_cells", "estimated_cost", "PARALLEL_COST_THRESHOLD"]
@@ -139,6 +150,14 @@ class ResultCache:
         except (KeyError, TypeError, ValueError, json.JSONDecodeError):
             return None          # stale/corrupt entry: fall through to a run
 
+    def _tmp_path(self, exp: StreamExperiment) -> Path:
+        """Writer-unique staging file: two processes (or threads) sharing a
+        cache dir must never clobber each other's in-flight tmp before the
+        atomic ``replace``."""
+        final = self.path(exp)
+        return final.with_name(
+            f"{final.name}.{os.getpid()}-{threading.get_ident()}.tmp")
+
     def put(self, exp: StreamExperiment, res: ExperimentResult) -> None:
         doc = {"experiment": dataclasses.asdict(res.experiment)}
         doc.update({k: getattr(res, k) for k in _RESULT_FIELDS})
@@ -147,7 +166,7 @@ class ResultCache:
         except TypeError:
             return   # non-JSON experiment (e.g. exotic backend_attrs): a
             #          memo that can't round-trip is skipped, never fatal
-        tmp = self.path(exp).with_suffix(".tmp")
+        tmp = self._tmp_path(exp)
         tmp.write_text(payload)
         tmp.replace(self.path(exp))
 
@@ -366,63 +385,120 @@ class StreamInsight:
         return (rec["machine"], rec["points"], rec["centroids"],
                 rec["memory_mb"], rec.get("policy"), rec.get("batch_max", 1))
 
-    def fit_models(self, records: list[dict] | None = None) -> list[ScenarioModel]:
-        records = records if records is not None else self.records()
+    def _scenario_arrays(self, records: list[dict]) -> list[tuple]:
+        """Sorted (key, n, t) triples, one per scenario group."""
         groups: dict[tuple, list[dict]] = {}
         for rec in records:
             groups.setdefault(self.scenario_key(rec), []).append(rec)
-        models = []
+        out = []
         for key, recs in sorted(groups.items()):
             n = np.array([r["partitions"] for r in recs], dtype=np.float64)
             t = np.array([r["throughput"] for r in recs], dtype=np.float64)
+            out.append((key, n, t))
+        return out
+
+    def fit_models(self, records: list[dict] | None = None, *,
+                   bootstrap: int = 0, bootstrap_seed: int = 0,
+                   backend: str = "numpy") -> list[ScenarioModel]:
+        """Fit one USL model per scenario — all scenarios in a single
+        batched call (ragged groups are padded and masked).  ``bootstrap=B``
+        adds percentile CIs for (sigma, kappa, peak_N) to every fit;
+        ``backend="jax"`` routes through the jit+vmap LM path."""
+        records = records if records is not None else self.records()
+        keys, ns, ts = [], [], []
+        for key, n, t in self._scenario_arrays(records):
             if len(np.unique(n)) < 2:
                 continue
-            models.append(ScenarioModel(key=key, fit=fit_usl(n, t), n=n, t=t))
-        return models
+            keys.append(key)
+            ns.append(n)
+            ts.append(t)
+        fits = fit_usl_ragged(ns, ts, bootstrap=bootstrap,
+                              bootstrap_seed=bootstrap_seed, backend=backend)
+        return [ScenarioModel(key=k, fit=f, n=n, t=t)
+                for k, f, n, t in zip(keys, fits, ns, ts)]
 
     # -- model evaluation (paper Fig 7) ----------------------------------------
-    def evaluate(self, n_train_configs: int, records: list[dict] | None = None,
-                 seed: int = 0) -> dict:
+    def evaluate(self, n_train_configs, records: list[dict] | None = None,
+                 seed: int = 0, backend: str = "numpy"):
         """Train on ``n_train_configs`` partition levels per scenario, report
-        RMSE of throughput predictions on the held-out levels."""
+        RMSE of throughput predictions on the held-out levels.
+
+        ``n_train_configs`` may be an int (returns one aggregate dict, the
+        historical behaviour) or a sequence of ints (returns a list of
+        aggregate dicts).  Either way every (training-set size × scenario)
+        train split becomes one row of a single ``fit_usl_batch`` call —
+        train membership is just a 0/1 weight row — so a full Fig-7 curve
+        costs one vectorized fit instead of a double loop of scalar fits.
+        Scenarios whose partition grid is too sparse for the requested
+        training-set size are skipped, never fatal."""
         records = records if records is not None else self.records()
-        rng = np.random.default_rng(seed)
-        groups: dict[tuple, list[dict]] = {}
-        for rec in records:
-            groups.setdefault(self.scenario_key(rec), []).append(rec)
-        per_scenario = {}
-        for key, recs in sorted(groups.items()):
-            n = np.array([r["partitions"] for r in recs], dtype=np.float64)
-            t = np.array([r["throughput"] for r in recs], dtype=np.float64)
-            levels = np.unique(n)
-            if len(levels) <= n_train_configs or n_train_configs < 2:
-                continue
-            # anchor the design range (min AND max level), sample the middle
-            middle = levels[(levels > levels.min()) & (levels < levels.max())]
-            n_mid = max(n_train_configs - 2, 0)
-            chosen = (rng.choice(middle, size=n_mid, replace=False)
-                      if n_mid else np.array([]))
-            train_levels = np.concatenate([[levels.min(), levels.max()], chosen])
-            tr = np.isin(n, train_levels)
-            fit = fit_usl(n[tr], t[tr])
+        multi = isinstance(n_train_configs, (list, tuple, np.ndarray))
+        wanted = [int(x) for x in
+                  (n_train_configs if multi else [n_train_configs])]
+        scenarios = self._scenario_arrays(records)
+        jobs = []      # (n_train, key, n, t, train_mask)
+        for n_train in wanted:
+            # a fresh generator per training-set size keeps the level choice
+            # identical to the historical one-size-per-call behaviour
+            rng = np.random.default_rng(seed)
+            for key, n, t in scenarios:
+                levels = np.unique(n)
+                if len(levels) <= n_train or n_train < 2:
+                    continue
+                # anchor the design range (min AND max level), sample the middle
+                middle = levels[(levels > levels.min()) & (levels < levels.max())]
+                n_mid = max(n_train - 2, 0)
+                if n_mid > len(middle):
+                    # defensive: with unique levels the earlier size check
+                    # already implies enough interior levels; this keeps a
+                    # future anchor-selection change from turning a sparse
+                    # grid into a rng.choice ValueError mid-sweep
+                    continue
+                chosen = (rng.choice(middle, size=n_mid, replace=False)
+                          if n_mid else np.array([]))
+                train_levels = np.concatenate(
+                    [[levels.min(), levels.max()], chosen])
+                jobs.append((n_train, key, n, t, np.isin(n, train_levels)))
+        fits = []
+        if jobs:
+            width = max(job[2].size for job in jobs)
+            n_mat = np.ones((len(jobs), width))
+            t_mat = np.zeros((len(jobs), width))
+            w_mat = np.zeros((len(jobs), width))
+            for i, (_nt, _key, n, t, tr) in enumerate(jobs):
+                n_mat[i, :n.size] = n
+                t_mat[i, :t.size] = t
+                w_mat[i, :n.size] = tr         # held-out levels: weight 0
+            fits = fit_usl_batch(n_mat, t_mat, weights=w_mat, backend=backend)
+        per_size: dict[int, dict] = {nt: {} for nt in wanted}
+        for (n_train, key, n, t, tr), fit in zip(jobs, fits):
             pred = fit.predict(n[~tr])
-            per_scenario[key] = dict(
-                rmse=rmse(t[~tr], pred),
-                rel_rmse=rmse(t[~tr], pred) / max(float(np.mean(t[~tr])), 1e-12),
+            err = rmse(t[~tr], pred)
+            per_size[n_train][key] = dict(
+                rmse=err,
+                rel_rmse=err / max(float(np.mean(t[~tr])), 1e-12),
                 n_train=int(tr.sum()), n_test=int((~tr).sum()),
                 sigma=fit.sigma, kappa=fit.kappa)
-        agg = {
-            "n_train_configs": n_train_configs,
-            "mean_rmse": float(np.mean([v["rmse"] for v in per_scenario.values()]))
-            if per_scenario else float("nan"),
-            "mean_rel_rmse": float(np.mean([v["rel_rmse"] for v in per_scenario.values()]))
-            if per_scenario else float("nan"),
-            "scenarios": per_scenario,
-        }
-        return agg
+        aggs = []
+        for n_train in wanted:
+            per_scenario = per_size[n_train]
+            aggs.append({
+                "n_train_configs": n_train,
+                "mean_rmse": float(np.mean(
+                    [v["rmse"] for v in per_scenario.values()]))
+                if per_scenario else float("nan"),
+                "mean_rel_rmse": float(np.mean(
+                    [v["rel_rmse"] for v in per_scenario.values()]))
+                if per_scenario else float("nan"),
+                "scenarios": per_scenario,
+            })
+        return aggs if multi else aggs[0]
 
-    def report(self) -> str:
+    def report(self, *, bootstrap: int = 0, bootstrap_seed: int = 0) -> str:
+        """Per-scenario model summaries; ``bootstrap=B`` appends percentile
+        confidence intervals for (sigma, kappa, peak_N) to every line."""
         lines = ["StreamInsight scenario models (USL):"]
-        for m in self.fit_models():
+        for m in self.fit_models(bootstrap=bootstrap,
+                                 bootstrap_seed=bootstrap_seed):
             lines.append("  " + str(m))
         return "\n".join(lines)

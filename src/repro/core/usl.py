@@ -19,11 +19,32 @@ where
 followed by retrograde scaling — the behaviour the paper observes for
 Kafka/Dask on HPC shared filesystems.
 
-Fitting is nonlinear least squares: a coarse log-grid seed followed by a
-Levenberg–Marquardt refinement with parameters projected onto the feasible
-region (sigma >= 0, kappa >= 0, gamma > 0).  Pure numpy — no scipy/R
-dependency (the paper uses the `usl` R package; this is a from-scratch
-equivalent validated by property tests).
+Fitting engine
+--------------
+The core is **batched**: ``fit_usl_batch(n, t)`` fits S scenarios at once on
+stacked ``(S, P)`` observation matrices —
+
+1. a fully vectorized grid seed: one broadcast evaluation of the
+   ``(sigma_grid × kappa_grid × S × P)`` tensor (chunked over scenarios to
+   bound memory) with the closed-form optimal gamma per grid cell;
+2. batched Levenberg–Marquardt: stacked ``(S, 3)`` parameters, batched
+   3×3 normal-equation solves (``np.linalg.solve`` on ``(S, 3, 3)`` stacks),
+   per-scenario damping, and an active-scenario mask so converged fits stop
+   paying for the stragglers' iterations;
+3. optional per-observation ``weights`` — a 0/1 mask makes ragged scenario
+   groups and train/test splits rectangular, and integer multiplicities make
+   bootstrap resamples *just more rows in the batch*, which is how
+   ``bootstrap=B`` produces nearly-free percentile confidence intervals for
+   (sigma, kappa, peak_N).
+
+``backend="numpy"`` (default, zero-dependency) and ``backend="jax"``
+(``jit`` + ``vmap`` over the LM step with ``lax.while_loop`` for the damping
+loop; float32 under JAX's default config, intended for very large batches)
+share the same seed grids and damping schedule.  Scalar ``fit_usl`` is a thin
+S=1 wrapper over the batch path — one code path, identical results.
+
+Pure numpy by default — no scipy/R dependency (the paper uses the `usl` R
+package; this is a from-scratch equivalent validated by property tests).
 """
 
 from __future__ import annotations
@@ -37,13 +58,30 @@ __all__ = [
     "usl_throughput",
     "USLFit",
     "fit_usl",
+    "fit_usl_batch",
+    "fit_usl_ragged",
     "r_squared",
     "rmse",
 ]
 
+# Coarse (sigma, kappa) seed grids.  Flattened sigma-major so np.argmin's
+# first-minimum tie-breaking matches the historical scalar loop order.
+SIGMA_GRID = np.concatenate([[0.0], np.logspace(-4, 0, 17)])
+KAPPA_GRID = np.concatenate([[0.0], np.logspace(-6, 0, 19)])
 
-def usl_throughput(n, sigma: float, kappa: float, gamma: float = 1.0):
-    """Evaluate T(N) for scalar or array ``n``."""
+# Levenberg–Marquardt damping schedule (shared by both backends).
+_LAM_INIT = 1e-3
+_LAM_MIN = 1e-12
+_LAM_MAX = 1e12
+_GAMMA_MIN = 1e-12
+
+# Bound on the (G, chunk, P) grid-seed broadcast tensor (elements), so huge
+# bootstrap batches never materialize multi-GB intermediates.
+_SEED_CHUNK_ELEMS = 8_000_000
+
+
+def usl_throughput(n, sigma, kappa, gamma=1.0):
+    """Evaluate T(N) for scalar or array ``n`` (coefficients broadcast)."""
     n = np.asarray(n, dtype=np.float64)
     denom = 1.0 + sigma * (n - 1.0) + kappa * n * (n - 1.0)
     return gamma * n / denom
@@ -65,9 +103,23 @@ def rmse(y_true, y_pred) -> float:
     return float(np.sqrt(np.mean((y_true - y_pred) ** 2)))
 
 
+def _fmt_ci(ci) -> str:
+    lo, hi = ci
+    def f(x):
+        return "inf" if math.isinf(x) else f"{x:.4g}"
+    return f"[{f(float(lo))}, {f(float(hi))}]"
+
+
 @dataclass
 class USLFit:
-    """Result of fitting the USL to (N, T) observations."""
+    """Result of fitting the USL to (N, T) observations.
+
+    ``history`` is opt-in (``keep_history=True``): per-iteration
+    ``(params, sse)`` snapshots are dead weight for thousands of batched
+    fits, so by default it stays empty.  ``sigma_ci``/``kappa_ci``/
+    ``peak_n_ci`` are percentile bootstrap confidence intervals, populated
+    when the fit was made with ``bootstrap=B > 0``.
+    """
 
     sigma: float
     kappa: float
@@ -77,6 +129,11 @@ class USLFit:
     n_obs: int
     fixed_gamma: bool = False
     history: list = field(default_factory=list, repr=False)
+    sigma_ci: tuple | None = None
+    kappa_ci: tuple | None = None
+    peak_n_ci: tuple | None = None
+    n_bootstrap: int = 0
+    ci_level: float = 0.95
 
     def predict(self, n):
         return usl_throughput(n, self.sigma, self.kappa, self.gamma)
@@ -102,41 +159,434 @@ class USLFit:
     def summary(self) -> str:
         peak = self.peak_n
         peak_s = f"{peak:.1f}" if math.isfinite(peak) else "inf"
-        return (
+        out = (
             f"USL(sigma={self.sigma:.4f}, kappa={self.kappa:.6f}, "
             f"gamma={self.gamma:.3f}) R2={self.r2:.4f} RMSE={self.rmse:.4g} "
             f"peak_N={peak_s}"
         )
+        if self.n_bootstrap:
+            pct = int(round(self.ci_level * 100))
+            out += (
+                f" CI{pct}(sigma={_fmt_ci(self.sigma_ci)}, "
+                f"kappa={_fmt_ci(self.kappa_ci)}, "
+                f"peak_N={_fmt_ci(self.peak_n_ci)}; B={self.n_bootstrap})"
+            )
+        return out
 
 
-def _solve_gamma(n, t, sigma: float, kappa: float) -> float:
-    """Closed-form optimal gamma for fixed (sigma, kappa): linear LSQ."""
-    base = usl_throughput(n, sigma, kappa, 1.0)
-    denom = float(np.dot(base, base))
-    if denom == 0.0:
-        return 1.0
-    return max(float(np.dot(base, t)) / denom, 1e-12)
+def _peak_n_arr(sigma, kappa):
+    """Batched N* = sqrt((1-sigma)/kappa); inf where kappa <= 0."""
+    sigma = np.asarray(sigma, dtype=np.float64)
+    kappa = np.asarray(kappa, dtype=np.float64)
+    safe = np.where(kappa > 0.0, kappa, 1.0)
+    return np.where(kappa > 0.0,
+                    np.sqrt(np.maximum(1.0 - sigma, 0.0) / safe), np.inf)
 
 
-def _residuals(params, n, t, fixed_gamma):
-    sigma, kappa = params[0], params[1]
-    gamma = fixed_gamma if fixed_gamma is not None else params[2]
-    return usl_throughput(n, sigma, kappa, gamma) - t
+def _usl_batch_eval(n, sigma, kappa, gamma):
+    """T(N) for (S, P) ``n`` with per-scenario (S,) coefficients."""
+    s = np.asarray(sigma, dtype=np.float64)[:, None]
+    k = np.asarray(kappa, dtype=np.float64)[:, None]
+    g = np.asarray(gamma, dtype=np.float64)[:, None]
+    return g * n / (1.0 + s * (n - 1.0) + k * n * (n - 1.0))
 
 
-def _jacobian(params, n, fixed_gamma):
-    """Analytic Jacobian of T(N; sigma, kappa, gamma) wrt the free params."""
-    sigma, kappa = params[0], params[1]
-    gamma = fixed_gamma if fixed_gamma is not None else params[2]
-    denom = 1.0 + sigma * (n - 1.0) + kappa * n * (n - 1.0)
-    t_over_gamma = n / denom
-    # dT/dsigma = -gamma * n * (n-1) / denom^2 ; dT/dkappa likewise with n(n-1)
-    d_sigma = -gamma * n * (n - 1.0) / (denom**2)
-    d_kappa = -gamma * n * n * (n - 1.0) / (denom**2)
-    cols = [d_sigma, d_kappa]
-    if fixed_gamma is None:
-        cols.append(t_over_gamma)
-    return np.stack(cols, axis=1)
+# -- batched numpy backend ----------------------------------------------------
+
+def _grid_seed(n, t, w, fixed_gamma):
+    """Vectorized coarse seed: argmin SSE over the whole (sigma, kappa)
+    grid at once, with the closed-form weighted-LSQ gamma per cell.  One
+    broadcast replaces the historical 360-iteration Python loop; chunked
+    over scenarios to bound the (G, chunk, P) intermediate."""
+    S, P = t.shape
+    ss = np.repeat(SIGMA_GRID, KAPPA_GRID.size)[:, None, None]
+    kk = np.tile(KAPPA_GRID, SIGMA_GRID.size)[:, None, None]
+    G = ss.shape[0]
+    chunk = max(1, _SEED_CHUNK_ELEMS // (G * P))
+    params = np.empty((S, 3), dtype=np.float64)
+    for lo in range(0, S, chunk):
+        hi = min(lo + chunk, S)
+        nc, tc, wc = n[lo:hi], t[lo:hi], w[lo:hi]
+        denom = 1.0 + ss * (nc - 1.0) + kk * nc * (nc - 1.0)   # (G, C, P)
+        base = nc / denom
+        if fixed_gamma is not None:
+            g = np.broadcast_to(fixed_gamma[lo:hi], (G, hi - lo))
+        else:
+            num = (wc * base * tc).sum(axis=-1)
+            den = (wc * base * base).sum(axis=-1)
+            g = np.where(den > 0.0,
+                         np.maximum(num / np.where(den > 0.0, den, 1.0),
+                                    _GAMMA_MIN),
+                         1.0)
+        r = g[..., None] * base - tc
+        sse = (wc * r * r).sum(axis=-1)                        # (G, C)
+        ib = np.argmin(sse, axis=0)
+        params[lo:hi, 0] = ss[ib, 0, 0]
+        params[lo:hi, 1] = kk[ib, 0, 0]
+        params[lo:hi, 2] = g[ib, np.arange(hi - lo)]
+    return params
+
+
+def _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol, keep_history):
+    """Batched LM refinement from the vectorized grid seed.
+
+    Per-scenario damping ``lam`` and an ``active`` mask reproduce the
+    scalar control flow exactly: each global iteration is one damped step
+    *attempt* per still-active scenario (accept → lam/3, reject → lam*4),
+    and scenarios leave the batch on convergence, damping blow-up, or a
+    singular normal matrix — so converged fits stop paying.
+    """
+    S, P = t.shape
+    free_gamma = fixed_gamma is None
+    params = _grid_seed(n, t, w, fixed_gamma)
+    res = _usl_batch_eval(n, params[:, 0], params[:, 1], params[:, 2]) - t
+    sse = (w * res * res).sum(axis=1)
+    lam = np.full(S, _LAM_INIT)
+    active = np.ones(S, dtype=bool)
+    histories = ([[(params[i].copy(), float(sse[i]))] for i in range(S)]
+                 if keep_history else None)
+    eye = np.eye(3)
+    for _ in range(max_iter):
+        idx = np.flatnonzero(active)
+        if idx.size == 0:
+            break
+        p = params[idx]
+        na, ta, wa, ra = n[idx], t[idx], w[idx], res[idx]
+        gam = p[:, 2:3]
+        denom = 1.0 + p[:, 0:1] * (na - 1.0) + p[:, 1:2] * na * (na - 1.0)
+        inv2 = denom ** -2
+        d_sig = -gam * na * (na - 1.0) * inv2
+        d_kap = -gam * na * na * (na - 1.0) * inv2
+        d_gam = (na / denom) if free_gamma else np.zeros_like(na)
+        jac = np.stack([d_sig, d_kap, d_gam], axis=2)          # (A, P, 3)
+        wj = wa[:, :, None] * jac
+        jtj = np.einsum("apk,apm->akm", wj, jac)
+        jtr = np.einsum("apk,ap->ak", wj, ra)
+        diag = np.maximum(np.einsum("akk->ak", jtj), 1e-12)
+        A = jtj + (lam[idx, None] * diag)[:, :, None] * eye
+        singular = np.zeros(idx.size, dtype=bool)
+        try:
+            step = np.linalg.solve(A, -jtr[..., None])[..., 0]
+        except np.linalg.LinAlgError:
+            # the stacked solve fails as a whole: redo per scenario and
+            # retire only the truly singular ones (scalar path: break)
+            step = np.zeros_like(jtr)
+            for j in range(idx.size):
+                try:
+                    step[j] = np.linalg.solve(A[j], -jtr[j][:, None])[:, 0]
+                except np.linalg.LinAlgError:
+                    singular[j] = True
+        cand = p + step
+        cand[:, 0] = np.maximum(cand[:, 0], 0.0)
+        cand[:, 1] = np.maximum(cand[:, 1], 0.0)
+        cand[:, 2] = (np.maximum(cand[:, 2], _GAMMA_MIN) if free_gamma
+                      else p[:, 2])
+        cdenom = 1.0 + cand[:, 0:1] * (na - 1.0) + cand[:, 1:2] * na * (na - 1.0)
+        cres = cand[:, 2:3] * na / cdenom - ta
+        csse = (wa * cres * cres).sum(axis=1)
+        better = ~singular & (csse < sse[idx])
+        rel = (sse[idx] - csse) / np.maximum(sse[idx], 1e-30)
+        acc = idx[better]
+        params[acc] = cand[better]
+        res[acc] = cres[better]
+        sse[acc] = csse[better]
+        lam[acc] = np.maximum(lam[acc] / 3.0, _LAM_MIN)
+        lam[idx[~better & ~singular]] *= 4.0
+        if histories is not None:
+            for i_glob in acc:
+                histories[i_glob].append((params[i_glob].copy(),
+                                          float(sse[i_glob])))
+        done = singular | (better & (rel < tol)) \
+            | (~better & ~singular & (lam[idx] > _LAM_MAX))
+        active[idx[done]] = False
+    gamma = params[:, 2] if free_gamma else np.asarray(fixed_gamma)
+    return params[:, 0], params[:, 1], gamma, histories
+
+
+# -- jax backend --------------------------------------------------------------
+
+_JAX_FIT_CACHE: dict = {}
+
+
+def _jax_fit_fn(free_gamma: bool, max_iter: int):
+    """Build (and cache) the jitted, vmapped per-scenario fit: grid seed +
+    an LM damping loop as ``lax.while_loop``.  Compiled once per
+    (free_gamma, max_iter, P) — jit handles the shape axis."""
+    key = (free_gamma, max_iter)
+    if key in _JAX_FIT_CACHE:
+        return _JAX_FIT_CACHE[key]
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    ss = jnp.asarray(np.repeat(SIGMA_GRID, KAPPA_GRID.size))
+    kk = jnp.asarray(np.tile(KAPPA_GRID, SIGMA_GRID.size))
+
+    def single(n, t, w, fg, tol):
+        denom = 1.0 + ss[:, None] * (n - 1.0) + kk[:, None] * n * (n - 1.0)
+        base = n / denom                                       # (G, P)
+        if free_gamma:
+            num = (w * base * t).sum(-1)
+            den = (w * base * base).sum(-1)
+            g = jnp.where(den > 0.0,
+                          jnp.maximum(num / jnp.where(den > 0.0, den, 1.0),
+                                      _GAMMA_MIN),
+                          1.0)
+        else:
+            g = jnp.full(ss.shape, fg)
+        r = g[:, None] * base - t
+        i0 = jnp.argmin((w * r * r).sum(-1))
+        p0 = jnp.stack([ss[i0], kk[i0], g[i0]])
+
+        def model_res(p):
+            d = 1.0 + p[0] * (n - 1.0) + p[1] * n * (n - 1.0)
+            return p[2] * n / d - t
+
+        def wsse(r):
+            return (w * r * r).sum()
+
+        def body(state):
+            p, lam, sse, it, done = state
+            d = 1.0 + p[0] * (n - 1.0) + p[1] * n * (n - 1.0)
+            d_sig = -p[2] * n * (n - 1.0) / d ** 2
+            d_kap = -p[2] * n * n * (n - 1.0) / d ** 2
+            d_gam = n / d if free_gamma else jnp.zeros_like(n)
+            jac = jnp.stack([d_sig, d_kap, d_gam], axis=1)     # (P, 3)
+            wj = w[:, None] * jac
+            jtj = wj.T @ jac
+            jtr = wj.T @ model_res(p)
+            diag = jnp.maximum(jnp.diag(jtj), 1e-12)
+            step = jnp.linalg.solve(jtj + lam * jnp.diag(diag), -jtr)
+            cand = p + step
+            cand = cand.at[0].set(jnp.maximum(cand[0], 0.0))
+            cand = cand.at[1].set(jnp.maximum(cand[1], 0.0))
+            cand = cand.at[2].set(jnp.maximum(cand[2], _GAMMA_MIN)
+                                  if free_gamma else p[2])
+            csse = wsse(model_res(cand))
+            # a singular solve surfaces as non-finite csse → rejected step
+            ok = jnp.isfinite(csse) & (csse < sse)
+            rel = (sse - csse) / jnp.maximum(sse, 1e-30)
+            p_new = jnp.where(ok, cand, p)
+            sse_new = jnp.where(ok, csse, sse)
+            lam_new = jnp.where(ok, jnp.maximum(lam / 3.0, _LAM_MIN), lam * 4.0)
+            done_new = done | (ok & (rel < tol)) | (~ok & (lam_new > _LAM_MAX))
+            return (p_new, lam_new, sse_new, it + 1, done_new)
+
+        def cond(state):
+            _p, _lam, _sse, it, done = state
+            return (it < max_iter) & (~done)
+
+        state = (p0, jnp.asarray(_LAM_INIT, p0.dtype), wsse(model_res(p0)),
+                 0, False)
+        p_fin, *_ = lax.while_loop(cond, body, state)
+        return p_fin
+
+    fit = jax.jit(jax.vmap(single, in_axes=(0, 0, 0, 0, None)))
+    _JAX_FIT_CACHE[key] = fit
+    return fit
+
+
+def _fit_batch_jax(n, t, w, fixed_gamma, max_iter, tol):
+    try:
+        fit = _jax_fit_fn(fixed_gamma is None, int(max_iter))
+    except ImportError as exc:   # pragma: no cover - jax is baked into CI
+        raise RuntimeError(
+            "fit_usl_batch(backend='jax') requires jax; use the default "
+            "backend='numpy' instead") from exc
+    fg = fixed_gamma if fixed_gamma is not None else np.zeros(len(t))
+    p = np.asarray(fit(n, t, w, fg, tol), dtype=np.float64)
+    gamma = (np.asarray(fixed_gamma, dtype=np.float64)
+             if fixed_gamma is not None else p[:, 2])
+    return p[:, 0], p[:, 1], gamma
+
+
+def _dispatch_fit(backend, n, t, w, fixed_gamma, max_iter, tol, keep_history):
+    if backend == "numpy":
+        return _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol,
+                                keep_history)
+    if backend == "jax":
+        sig, kap, gam = _fit_batch_jax(n, t, w, fixed_gamma, max_iter, tol)
+        return sig, kap, gam, None
+    raise ValueError(f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
+
+
+def _bootstrap_cis(backend, n, t, w, fixed_gamma, max_iter, tol,
+                   n_boot, seed, ci_level):
+    """Percentile bootstrap over observation resamples.  A resample with
+    replacement is exactly a multinomial weight vector over the observed
+    points, so B resamples of S scenarios are one (B*S, P) weighted batch
+    through the same fit core — nearly free next to S scalar refits."""
+    S, P = t.shape
+    rng = np.random.default_rng(seed)
+    wsum = w.sum(axis=1)
+    counts = np.maximum(np.rint(wsum).astype(np.int64), 2)
+    pvals = w / wsum[:, None]
+    wb = rng.multinomial(counts, pvals, size=(n_boot, S))
+    wb = wb.astype(np.float64).reshape(n_boot * S, P)
+    nb = np.broadcast_to(n, (n_boot, S, P)).reshape(n_boot * S, P)
+    tb = np.broadcast_to(t, (n_boot, S, P)).reshape(n_boot * S, P)
+    fgb = np.tile(fixed_gamma, n_boot) if fixed_gamma is not None else None
+    sig, kap, _gam, _ = _dispatch_fit(backend, nb, tb, wb, fgb,
+                                      max_iter, tol, False)
+    sig = sig.reshape(n_boot, S)
+    kap = kap.reshape(n_boot, S)
+    peak = _peak_n_arr(sig, kap)
+    q = [(1.0 - ci_level) / 2.0 * 100.0, (1.0 + ci_level) / 2.0 * 100.0]
+    out = {}
+    for name, arr in (("sigma", sig), ("kappa", kap), ("peak_n", peak)):
+        # method="nearest" returns actual samples, so inf peak_N bounds
+        # never hit inf-minus-inf interpolation
+        lo, hi = np.percentile(arr, q, axis=0, method="nearest")
+        out[name] = (lo, hi)
+    return out
+
+
+def fit_usl_batch(
+    n,
+    t,
+    *,
+    weights=None,
+    fix_gamma: bool = False,
+    max_iter: int = 200,
+    tol: float = 1e-12,
+    backend: str = "numpy",
+    keep_history: bool = False,
+    bootstrap: int = 0,
+    bootstrap_seed: int = 0,
+    ci_level: float = 0.95,
+) -> list[USLFit]:
+    """Fit the USL to S scenarios at once.
+
+    Parameters
+    ----------
+    n : ``(P,)`` shared parallelism levels or ``(S, P)`` per scenario.
+    t : ``(S, P)`` measured throughputs.
+    weights : optional ``(S, P)`` non-negative per-observation weights.
+        Zeros exclude padded cells (ragged groups, train/test masks);
+        integer multiplicities express resampling.  Padded cells may hold
+        any values — they are neutralized before validation.
+    fix_gamma : pin gamma per scenario to the mean throughput observed at
+        that scenario's smallest N (the paper's normalization).
+    backend : ``"numpy"`` (default) or ``"jax"`` (jit + vmap LM with a
+        ``lax.while_loop`` damping loop; float32 under JAX defaults, meant
+        for very large batches; ``history`` is not recorded).
+    keep_history : record per-iteration ``(params, sse)`` snapshots on each
+        ``USLFit`` (off by default — dead weight for large batches).
+    bootstrap : number of bootstrap resamples per scenario (0 = off).
+        Populates ``sigma_ci``/``kappa_ci``/``peak_n_ci`` with ``ci_level``
+        percentile intervals.
+
+    Returns one ``USLFit`` per scenario, in input order.
+    """
+    t = np.asarray(t, dtype=np.float64)
+    if t.ndim != 2:
+        raise ValueError(
+            f"t must be 2-D (scenarios, observations), got shape {t.shape}")
+    S, P = t.shape
+    if S == 0:
+        return []
+    n = np.asarray(n, dtype=np.float64)
+    if n.ndim == 1:
+        n = np.broadcast_to(n, (S, P))
+    if n.shape != t.shape:
+        raise ValueError(
+            f"n and t must have the same shape, got {n.shape} vs {t.shape}")
+    if weights is None:
+        w = np.ones((S, P), dtype=np.float64)
+    else:
+        w = np.asarray(weights, dtype=np.float64)
+        if w.shape != t.shape:
+            raise ValueError(
+                f"weights must match t's shape {t.shape}, got {w.shape}")
+        if np.any(w < 0.0):
+            raise ValueError("weights must be non-negative")
+    valid = w > 0.0
+    if np.any(valid.sum(axis=1) < 2):
+        raise ValueError("need at least 2 observations to fit USL")
+    if np.any(valid & (n < 1.0)):
+        raise ValueError("parallelism N must be >= 1")
+    if np.any(valid & (t < 0.0)):
+        raise ValueError("throughput must be non-negative")
+    # neutralize padded cells so they cannot poison the broadcasts
+    n = np.where(valid, n, 1.0)
+    t = np.where(valid, t, 0.0)
+
+    fixed_gamma = None
+    if fix_gamma:
+        n_min = np.min(np.where(valid, n, np.inf), axis=1)
+        at_min = valid & (n == n_min[:, None])
+        wm = w * at_min
+        fixed_gamma = (wm * t).sum(axis=1) / wm.sum(axis=1) / n_min
+        fixed_gamma = np.maximum(fixed_gamma, _GAMMA_MIN)
+
+    sigma, kappa, gamma, histories = _dispatch_fit(
+        backend, n, t, w, fixed_gamma, max_iter, tol, keep_history)
+
+    pred = _usl_batch_eval(n, sigma, kappa, gamma)
+    wsum = w.sum(axis=1)
+    sse = (w * (pred - t) ** 2).sum(axis=1)
+    rmse_v = np.sqrt(sse / wsum)
+    tmean = (w * t).sum(axis=1) / wsum
+    sst = (w * (t - tmean[:, None]) ** 2).sum(axis=1)
+    r2_v = np.where(sst > 0.0, 1.0 - sse / np.where(sst > 0.0, sst, 1.0),
+                    np.where(sse == 0.0, 1.0, 0.0))
+    n_obs = valid.sum(axis=1)
+
+    cis = None
+    if bootstrap:
+        cis = _bootstrap_cis(backend, n, t, w, fixed_gamma, max_iter, tol,
+                             bootstrap, bootstrap_seed, ci_level)
+
+    fits = []
+    for i in range(S):
+        fits.append(USLFit(
+            sigma=float(sigma[i]),
+            kappa=float(kappa[i]),
+            gamma=float(gamma[i]),
+            r2=float(r2_v[i]),
+            rmse=float(rmse_v[i]),
+            n_obs=int(n_obs[i]),
+            fixed_gamma=fix_gamma,
+            history=histories[i] if histories is not None else [],
+            sigma_ci=(float(cis["sigma"][0][i]), float(cis["sigma"][1][i]))
+            if cis else None,
+            kappa_ci=(float(cis["kappa"][0][i]), float(cis["kappa"][1][i]))
+            if cis else None,
+            peak_n_ci=(float(cis["peak_n"][0][i]), float(cis["peak_n"][1][i]))
+            if cis else None,
+            n_bootstrap=bootstrap if cis else 0,
+            ci_level=ci_level,
+        ))
+    return fits
+
+
+def fit_usl_ragged(ns, ts, **kwargs) -> list[USLFit]:
+    """Fit scenarios with *different* observation counts in one batch.
+
+    ``ns``/``ts`` are sequences of 1-D arrays; rows are padded to the
+    longest scenario and masked out via zero weights, then handed to
+    ``fit_usl_batch`` (all keyword options forwarded).
+    """
+    if len(ns) != len(ts):
+        raise ValueError("ns and ts must have the same length")
+    S = len(ns)
+    if S == 0:
+        return []
+    P = max(len(a) for a in ns)
+    n = np.ones((S, P), dtype=np.float64)
+    t = np.zeros((S, P), dtype=np.float64)
+    w = np.zeros((S, P), dtype=np.float64)
+    for i, (a, b) in enumerate(zip(ns, ts)):
+        a = np.asarray(a, dtype=np.float64)
+        b = np.asarray(b, dtype=np.float64)
+        if a.ndim != 1 or a.shape != b.shape:
+            raise ValueError(
+                f"scenario {i}: n and t must be 1-D and same shape, "
+                f"got {a.shape} vs {b.shape}")
+        n[i, :a.size] = a
+        t[i, :b.size] = b
+        w[i, :a.size] = 1.0
+    return fit_usl_batch(n, t, weights=w, **kwargs)
 
 
 def fit_usl(
@@ -146,8 +596,12 @@ def fit_usl(
     fix_gamma: bool = False,
     max_iter: int = 200,
     tol: float = 1e-12,
+    keep_history: bool = False,
+    bootstrap: int = 0,
+    bootstrap_seed: int = 0,
+    backend: str = "numpy",
 ) -> USLFit:
-    """Fit the USL to observations.
+    """Fit the USL to one scenario's observations.
 
     Parameters
     ----------
@@ -156,86 +610,17 @@ def fit_usl(
     fix_gamma : if True, pin gamma to the mean throughput observed at the
         smallest N (the paper's normalization); otherwise gamma is fitted.
 
-    Strategy: coarse log-grid over (sigma, kappa) with closed-form gamma,
-    then Levenberg–Marquardt from the best seed, parameters projected to
-    sigma >= 0, kappa >= 0 after each accepted step.
+    A thin S=1 wrapper over ``fit_usl_batch`` — scalar and batched fits
+    share one code path by construction.
     """
     n = np.asarray(n, dtype=np.float64)
     t = np.asarray(t, dtype=np.float64)
     if n.shape != t.shape or n.ndim != 1:
-        raise ValueError(f"n and t must be 1-D and same shape, got {n.shape} vs {t.shape}")
+        raise ValueError(
+            f"n and t must be 1-D and same shape, got {n.shape} vs {t.shape}")
     if n.size < 2:
         raise ValueError("need at least 2 observations to fit USL")
-    if np.any(n < 1.0):
-        raise ValueError("parallelism N must be >= 1")
-    if np.any(t < 0.0):
-        raise ValueError("throughput must be non-negative")
-
-    fixed_gamma = None
-    if fix_gamma:
-        n_min = n.min()
-        fixed_gamma = float(np.mean(t[n == n_min]) / usl_throughput(n_min, 0.0, 0.0, 1.0))
-        fixed_gamma = max(fixed_gamma, 1e-12)
-
-    # --- coarse grid seed -------------------------------------------------
-    sigma_grid = np.concatenate([[0.0], np.logspace(-4, 0, 17)])
-    kappa_grid = np.concatenate([[0.0], np.logspace(-6, 0, 19)])
-    best = None
-    for s in sigma_grid:
-        for k in kappa_grid:
-            g = fixed_gamma if fixed_gamma is not None else _solve_gamma(n, t, s, k)
-            res = usl_throughput(n, s, k, g) - t
-            sse = float(np.dot(res, res))
-            if best is None or sse < best[0]:
-                best = (sse, s, k, g)
-    _, s0, k0, g0 = best
-
-    # --- Levenberg–Marquardt refinement ----------------------------------
-    if fixed_gamma is not None:
-        params = np.array([s0, k0], dtype=np.float64)
-    else:
-        params = np.array([s0, k0, g0], dtype=np.float64)
-    lam = 1e-3
-    res = _residuals(params, n, t, fixed_gamma)
-    sse = float(np.dot(res, res))
-    history = [(params.copy(), sse)]
-    for _ in range(max_iter):
-        jac = _jacobian(params, n, fixed_gamma)
-        jtj = jac.T @ jac
-        jtr = jac.T @ res
-        try:
-            step = np.linalg.solve(jtj + lam * np.diag(np.maximum(np.diag(jtj), 1e-12)), -jtr)
-        except np.linalg.LinAlgError:
-            break
-        cand = params + step
-        cand[0] = max(cand[0], 0.0)  # sigma >= 0
-        cand[1] = max(cand[1], 0.0)  # kappa >= 0
-        if fixed_gamma is None:
-            cand[2] = max(cand[2], 1e-12)
-        cand_res = _residuals(cand, n, t, fixed_gamma)
-        cand_sse = float(np.dot(cand_res, cand_res))
-        if cand_sse < sse:
-            rel = (sse - cand_sse) / max(sse, 1e-30)
-            params, res, sse = cand, cand_res, cand_sse
-            lam = max(lam / 3.0, 1e-12)
-            history.append((params.copy(), sse))
-            if rel < tol:
-                break
-        else:
-            lam *= 4.0
-            if lam > 1e12:
-                break
-
-    sigma, kappa = float(params[0]), float(params[1])
-    gamma = float(fixed_gamma if fixed_gamma is not None else params[2])
-    pred = usl_throughput(n, sigma, kappa, gamma)
-    return USLFit(
-        sigma=sigma,
-        kappa=kappa,
-        gamma=gamma,
-        r2=r_squared(t, pred),
-        rmse=rmse(t, pred),
-        n_obs=int(n.size),
-        fixed_gamma=fix_gamma,
-        history=history,
-    )
+    return fit_usl_batch(
+        n[None, :], t[None, :], fix_gamma=fix_gamma, max_iter=max_iter,
+        tol=tol, keep_history=keep_history, bootstrap=bootstrap,
+        bootstrap_seed=bootstrap_seed, backend=backend)[0]

@@ -189,6 +189,81 @@ def test_policy_and_batch_max_are_grid_axes():
                for e in d2.experiments())
 
 
+def _synthetic_records(levels, machine="wrangler", sigma=0.3, kappa=0.004):
+    """Records shaped like ExperimentResult.record() without running cells."""
+    import numpy as np
+
+    return [{"machine": machine, "points": 16000, "centroids": 1024,
+             "memory_mb": 3008, "policy": None, "batch_max": 1,
+             "partitions": int(n),
+             "throughput": float(n / (1 + sigma * (n - 1) + kappa * n * (n - 1)))}
+            for n in levels]
+
+
+def test_evaluate_multi_sizes_match_single_calls():
+    """evaluate([k1, k2, ...]) is one batched fit but must reproduce the
+    per-size evaluate(k) results exactly (same RNG stream per size)."""
+    recs = _synthetic_records([1, 2, 3, 4, 6, 8, 12, 16])
+    si = StreamInsight()
+    multi = si.evaluate([2, 3, 4], records=recs, seed=7)
+    assert [m["n_train_configs"] for m in multi] == [2, 3, 4]
+    for agg in multi:
+        single = si.evaluate(agg["n_train_configs"], records=recs, seed=7)
+        assert single == agg
+
+
+def test_evaluate_sparse_grid_skips_instead_of_crashing():
+    """A scenario whose partition grid is too sparse for the requested
+    training-set size is dropped from the aggregate, never a ValueError."""
+    import math
+
+    sparse = _synthetic_records([1, 2, 16])
+    rich = _synthetic_records([1, 2, 3, 4, 6, 8], machine="serverless",
+                              sigma=0.02, kappa=1e-5)
+    si = StreamInsight()
+    # n_train=4 > the sparse scenario's 3 levels: only the rich one survives
+    agg = si.evaluate(4, records=sparse + rich, seed=0)
+    assert {k[0] for k in agg["scenarios"]} == {"serverless"}
+    # nothing fits at all -> empty aggregate with NaN means, still no crash
+    empty = si.evaluate(5, records=sparse, seed=0)
+    assert empty["scenarios"] == {}
+    assert math.isnan(empty["mean_rmse"])
+    # the sparse scenario still works at a feasible size
+    both = si.evaluate(2, records=sparse + rich, seed=0)
+    assert {k[0] for k in both["scenarios"]} == {"serverless", "wrangler"}
+
+
+def test_fit_models_bootstrap_cis_in_report():
+    recs = _synthetic_records([1, 2, 3, 4, 6, 8, 12, 16])
+    si = StreamInsight()
+    models = si.fit_models(records=recs, bootstrap=16, bootstrap_seed=3)
+    assert len(models) == 1
+    fit = models[0].fit
+    assert fit.n_bootstrap == 16
+    assert fit.sigma_ci[0] <= fit.sigma <= fit.sigma_ci[1]
+    report = si.report()          # plain report still works, no CI text
+    assert "CI95" not in report
+
+
+def test_result_cache_tmp_name_is_writer_unique(tmp_path, monkeypatch):
+    """Two processes sharing a cache dir stage to different tmp files, so
+    one writer can't clobber the other's in-flight payload."""
+    import repro.core.streaminsight as si_mod
+
+    exp = StreamExperiment(machine="serverless", partitions=2, n_messages=12)
+    cache = ResultCache(tmp_path)
+    mine = cache._tmp_path(exp)
+    monkeypatch.setattr(si_mod.os, "getpid", lambda: 424242)
+    theirs = cache._tmp_path(exp)
+    assert mine != theirs
+    assert mine.name.startswith(cache.path(exp).name)
+    monkeypatch.undo()
+    # a put leaves exactly the final artifact behind — no stray tmp files
+    cache.put(exp, run_experiment(exp))
+    assert cache.get(exp) is not None
+    assert [p.name for p in tmp_path.iterdir()] == [cache.path(exp).name]
+
+
 def test_scenario_key_separates_policy_levels():
     si = StreamInsight()
     si.run(ExperimentDesign(machines=["wrangler"], partitions=[1, 2],

@@ -7,7 +7,8 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.usl import USLFit, fit_usl, r_squared, rmse, usl_throughput
+from repro.core.usl import (USLFit, fit_usl, fit_usl_batch, fit_usl_ragged,
+                            r_squared, rmse, usl_throughput)
 
 NS = np.array([1, 2, 4, 8, 16, 32, 64], dtype=np.float64)
 
@@ -100,3 +101,145 @@ def test_r2_rmse_basics():
     assert r_squared(y, y) == 1.0
     assert rmse(y, y) == 0.0
     assert rmse(y, y + 1.0) == pytest.approx(1.0)
+
+
+# -- batched engine -----------------------------------------------------------
+
+def _synth_batch(seed, s=5, noise=0.05):
+    rng = np.random.default_rng(seed)
+    sigma = rng.uniform(0.0, 0.7, s)
+    kappa = rng.uniform(0.0, 0.02, s)
+    gamma = rng.uniform(0.2, 30.0, s)
+    t = usl_throughput(NS[None, :], sigma[:, None], kappa[:, None],
+                       gamma[:, None])
+    t = t * rng.lognormal(0.0, noise, t.shape)
+    return np.broadcast_to(NS, (s, NS.size)), t
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None)
+def test_batch_matches_scalar_fits(seed):
+    """Property: the batched engine and the scalar wrapper agree scenario
+    by scenario on random (sigma, kappa, gamma, noise) draws — same code
+    path, so within 1e-6 SSE-relative tolerance."""
+    n, t = _synth_batch(seed)
+    batch = fit_usl_batch(n, t)
+    for i, bf in enumerate(batch):
+        sf = fit_usl(NS, t[i])
+        r_s = sf.predict(NS) - t[i]
+        r_b = bf.predict(NS) - t[i]
+        sse_s = float(r_s @ r_s)
+        sse_b = float(r_b @ r_b)
+        assert sse_b <= sse_s + 1e-6 * max(sse_s, 1e-30)
+        assert bf.sigma == pytest.approx(sf.sigma, abs=1e-9)
+        assert bf.kappa == pytest.approx(sf.kappa, abs=1e-9)
+        assert bf.gamma == pytest.approx(sf.gamma, rel=1e-9)
+        assert bf.r2 == pytest.approx(sf.r2, abs=1e-12)
+        assert bf.rmse == pytest.approx(sf.rmse, rel=1e-9)
+
+
+def test_batch_fix_gamma_matches_scalar():
+    n, t = _synth_batch(3, s=4)
+    batch = fit_usl_batch(n, t, fix_gamma=True)
+    for i, bf in enumerate(batch):
+        sf = fit_usl(NS, t[i], fix_gamma=True)
+        assert bf.fixed_gamma and sf.fixed_gamma
+        assert bf.gamma == pytest.approx(sf.gamma, rel=1e-12)
+        assert bf.sigma == pytest.approx(sf.sigma, abs=1e-9)
+        assert bf.kappa == pytest.approx(sf.kappa, abs=1e-9)
+
+
+def test_batch_shared_vs_per_scenario_n():
+    _, t = _synth_batch(9, s=3)
+    shared = fit_usl_batch(NS, t)
+    stacked = fit_usl_batch(np.broadcast_to(NS, t.shape), t)
+    for a, b in zip(shared, stacked):
+        assert (a.sigma, a.kappa, a.gamma) == (b.sigma, b.kappa, b.gamma)
+
+
+def test_ragged_weights_equal_subset_fits():
+    """A zero-weight-padded batch row must fit exactly like the scalar fit
+    of its unpadded observations."""
+    ns = [NS, NS[:4], NS[2:]]
+    rng = np.random.default_rng(5)
+    ts = [usl_throughput(a, 0.2, 0.004, 3.0) * rng.lognormal(0, 0.04, a.shape)
+          for a in ns]
+    batch = fit_usl_ragged(ns, ts)
+    for a, b, fit in zip(ns, ts, batch):
+        ref = fit_usl(a, b)
+        assert fit.n_obs == a.size
+        assert fit.sigma == pytest.approx(ref.sigma, abs=1e-7)
+        assert fit.kappa == pytest.approx(ref.kappa, abs=1e-7)
+        assert fit.gamma == pytest.approx(ref.gamma, rel=1e-7)
+        assert fit.rmse == pytest.approx(ref.rmse, rel=1e-6, abs=1e-12)
+
+
+def test_history_is_opt_in():
+    t = usl_throughput(NS, 0.2, 0.003, 2.0)
+    assert fit_usl(NS, t).history == []
+    hist = fit_usl(NS, t, keep_history=True).history
+    assert len(hist) >= 1
+    params0, sse0 = hist[0]
+    assert params0.shape == (3,) and sse0 >= 0.0
+    # batch: every scenario gets its own trace
+    fits = fit_usl_batch(np.broadcast_to(NS, (2, NS.size)),
+                         np.stack([t, t * 2.0]), keep_history=True)
+    assert all(len(f.history) >= 1 for f in fits)
+
+
+def test_bootstrap_ci_shapes_and_containment():
+    rng = np.random.default_rng(8)
+    t = usl_throughput(NS, 0.25, 0.005, 10.0) * rng.lognormal(0, 0.03, NS.shape)
+    fit = fit_usl(NS, t, bootstrap=64, bootstrap_seed=1)
+    assert fit.n_bootstrap == 64
+    for ci in (fit.sigma_ci, fit.kappa_ci, fit.peak_n_ci):
+        assert isinstance(ci, tuple) and len(ci) == 2
+        assert ci[0] <= ci[1]
+    # with mild noise the point estimate sits inside its own 95% interval
+    assert fit.sigma_ci[0] <= fit.sigma <= fit.sigma_ci[1]
+    assert fit.kappa_ci[0] <= fit.kappa <= fit.kappa_ci[1]
+    assert fit.peak_n_ci[0] <= fit.peak_n <= fit.peak_n_ci[1]
+    assert "CI95" in fit.summary()
+    # no bootstrap: fields stay empty and summary stays compact
+    plain = fit_usl(NS, t)
+    assert plain.sigma_ci is None and plain.n_bootstrap == 0
+    assert "CI95" not in plain.summary()
+
+
+def test_bootstrap_ci_handles_infinite_peak():
+    """kappa ~ 0 scenarios have peak_N = inf; the percentile CI must carry
+    inf through without crashing or producing NaNs."""
+    t = usl_throughput(NS, 0.1, 0.0, 4.0)
+    fit = fit_usl(NS, t, bootstrap=32, bootstrap_seed=2)
+    lo, hi = fit.peak_n_ci
+    assert not math.isnan(lo) and not math.isnan(hi)
+    assert hi == math.inf
+
+
+def test_batch_input_validation():
+    with pytest.raises(ValueError):
+        fit_usl_batch(NS, np.ones((2, 3)))                 # n/t mismatch
+    with pytest.raises(ValueError):
+        fit_usl_batch(NS, np.ones(NS.size))                # t not 2-D
+    with pytest.raises(ValueError):
+        fit_usl_batch(NS, np.ones((1, NS.size)),
+                      weights=-np.ones((1, NS.size)))      # negative weights
+    with pytest.raises(ValueError):
+        fit_usl_batch(NS, np.ones((1, NS.size)),
+                      weights=np.eye(1, NS.size))          # < 2 effective obs
+    with pytest.raises(ValueError):
+        fit_usl_batch(NS, np.ones((1, NS.size)), backend="torch")
+    assert fit_usl_batch(NS, np.zeros((0, NS.size))) == []
+
+
+def test_jax_backend_matches_numpy():
+    pytest.importorskip("jax")
+    n, t = _synth_batch(21, s=6)
+    ref = fit_usl_batch(n, t)
+    jax_fits = fit_usl_batch(n, t, backend="jax")
+    for a, b in zip(jax_fits, ref):
+        # float32 LM: same basin, looser tolerance than the numpy path
+        np.testing.assert_allclose(a.predict(NS), b.predict(NS),
+                                   rtol=2e-2, atol=1e-3)
+        assert a.sigma == pytest.approx(b.sigma, abs=5e-3)
+        assert a.kappa == pytest.approx(b.kappa, abs=5e-4)
