@@ -1,0 +1,125 @@
+"""Fig 8 (beyond the paper — its §V future work): closed-loop elastic scaling.
+
+The paper ends with "we will integrate StreamInsight into the resource
+management algorithm of Pilot-Streaming so as to support predictive scaling".
+This benchmark runs that full loop — characterize → model → *adapt* — on both
+simulated platforms:
+
+1. characterize: a partition sweep per machine (the Fig 5/6 measurement),
+2. model: one batched USL fit per scenario,
+3. adapt: closed-loop adaptation cells where the incoming rate follows a
+   time-varying program (step, ramp, diurnal sine, Poisson-modulated bursts)
+   and a ``ControlLoop`` resizes the elastic backend live.
+
+Claims checked (the EILC value proposition):
+
+* on the **step** and **burst** traces, on both platforms, the
+  USL-predictive policy has **fewer SLO-violating ticks than the reactive
+  lag-threshold baseline at equal-or-lower cost integral** (∫ allocation
+  dt) — the model anticipates demand where the baseline only reacts to
+  backlog;
+* the predictive policy is **cheaper than static-peak provisioning** on
+  every trace (elasticity refunds idle capacity), and every closed-loop run
+  drains its topic.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.streaminsight import (AdaptationDesign, ExperimentDesign,
+                                      StreamInsight)
+
+PARTITIONS = [1, 2, 4, 8, 12, 16]
+
+# per-machine adaptation scenarios, scaled to each platform's capacity band
+# (wrangler runs the update_locked consistency policy — the StreamInsight
+# recommendation; full_fit_locked's sigma ~ 1 leaves nothing to scale)
+SCENARIOS = {
+    "serverless": dict(
+        policy=None, base_hz=2.0, high_hz=12.0,
+        diurnal_mean_hz=6.0, burst_hz=10.0),
+    "wrangler": dict(
+        policy="update_locked", base_hz=1.0, high_hz=6.0,
+        diurnal_mean_hz=3.0, burst_hz=7.0),
+}
+
+
+def rate_traces(s: dict) -> list[dict]:
+    return [
+        dict(kind="step", base_hz=s["base_hz"], high_hz=s["high_hz"],
+             t_step=40.0),
+        dict(kind="ramp", start_hz=s["base_hz"], end_hz=s["high_hz"],
+             t0=30.0, t1=90.0),
+        dict(kind="diurnal", mean_hz=s["diurnal_mean_hz"], amplitude=0.7,
+             period_s=60.0),
+        dict(kind="burst", base_hz=s["base_hz"], burst_hz=s["burst_hz"],
+             burst_len_s=10.0, mean_gap_s=25.0, seed=8),
+    ]
+
+
+def run(n_messages: int = 60) -> list[dict]:
+    rows = []
+    for machine, s in SCENARIOS.items():
+        si = StreamInsight()
+        si.run(ExperimentDesign(machines=[machine], partitions=PARTITIONS,
+                                points=[8000], centroids=[1024],
+                                n_messages=n_messages, policy=s["policy"]),
+               parallel=True)
+        model = si.fit_models()[0]
+        design = AdaptationDesign(
+            machines=[machine], policy=s["policy"],
+            scaling_policies=["usl", "reactive", "static"],
+            rates=rate_traces(s), horizon_s=120.0, max_partitions=16,
+            slo_lag=32)
+        for res in si.run_adaptation(design):
+            r = res.record()
+            rows.append({
+                "machine": machine, "scaling": r["scaling_policy"],
+                "rate": r["rate_kind"],
+                "slo_violations": r["slo_violations"],
+                "ticks": r["ticks"],
+                "violation_frac": round(r["violation_frac"], 3),
+                "cost_integral": round(r["cost_integral"], 1),
+                "processed": r["processed"],
+                "drained": r["drained"],
+                "drain_s": round(r["drain_s"], 1),
+                "final_n": r["final_allocation"],
+                "usl_peak_n": round(model.fit.peak_n, 1),
+            })
+    return rows
+
+
+def by(rows: list[dict], machine: str, rate: str, scaling: str) -> dict:
+    return next(r for r in rows if r["machine"] == machine
+                and r["rate"] == rate and r["scaling"] == scaling)
+
+
+def main() -> None:
+    rows = run()
+    emit(rows, "fig8_adaptation")
+    for r in rows:
+        assert r["drained"], f"closed-loop run failed to drain: {r}"
+    for machine in SCENARIOS:
+        for rate in ("step", "burst"):
+            usl = by(rows, machine, rate, "usl")
+            reactive = by(rows, machine, rate, "reactive")
+            static = by(rows, machine, rate, "static")
+            assert usl["slo_violations"] < reactive["slo_violations"], \
+                f"predictive not better than reactive on {machine}/{rate}: " \
+                f"{usl} vs {reactive}"
+            assert usl["cost_integral"] <= reactive["cost_integral"], \
+                f"predictive costs more than reactive on {machine}/{rate}: " \
+                f"{usl} vs {reactive}"
+            assert usl["cost_integral"] < static["cost_integral"], \
+                f"predictive not cheaper than static-peak on {machine}/{rate}"
+        traces = sorted({r["rate"] for r in rows if r["machine"] == machine})
+        saved = [1.0 - by(rows, machine, t, "usl")["cost_integral"]
+                 / by(rows, machine, t, "static")["cost_integral"]
+                 for t in traces]
+        print(f"fig8 {machine}: predictive saves "
+              f"{100 * min(saved):.0f}-{100 * max(saved):.0f}% of static-peak "
+              f"cost across {len(traces)} traces  [claims OK]")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,11 +14,13 @@ import time
 
 def main() -> None:
     from benchmarks import (fig3_lambda_memory, fig4_latency, fig5_throughput,
-                            fig6_usl_fit, fig7_model_eval, kernels, perf_smoke)
+                            fig6_usl_fit, fig7_model_eval, fig8_adaptation,
+                            kernels, perf_smoke)
 
     t0 = time.time()
     for mod in [fig3_lambda_memory, fig4_latency, fig5_throughput,
-                fig6_usl_fit, fig7_model_eval, kernels, perf_smoke]:
+                fig6_usl_fit, fig7_model_eval, fig8_adaptation,
+                kernels, perf_smoke]:
         name = mod.__name__.split(".")[-1]
         print(f"\n===== {name} =====", flush=True)
         t = time.time()

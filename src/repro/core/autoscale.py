@@ -1,11 +1,13 @@
-"""USL-driven predictive autoscaler (the paper's §V future work, implemented).
+"""USL-driven autoscaling: offline planner AND live closed control loop.
 
-"We will integrate StreamInsight into the resource management algorithm of
-Pilot-Streaming so as to support predictive scaling, viz., the ability to
-adapt the resource allocations and configurations to changes in the incoming
-data rate(s)."
+The paper's §V future work — "we will integrate StreamInsight into the
+resource management algorithm of Pilot-Streaming so as to support predictive
+scaling, viz., the ability to adapt the resource allocations and
+configurations to changes in the incoming data rate(s)" — implemented in two
+layers:
 
-Given a fitted USL model for a scenario, the autoscaler answers:
+**Offline planner** (``Autoscaler``): given a fitted USL model for a
+scenario it answers
 
 * ``partitions_for(target_rate)`` — the smallest N whose predicted
   throughput sustains the incoming rate (with headroom), clamped at the
@@ -16,6 +18,19 @@ Given a fitted USL model for a scenario, the autoscaler answers:
   of throttling of data sources to guarantee processing").
 * ``plan(rate_series)`` — partition counts tracking a time-varying rate,
   with hysteresis to avoid flapping.
+
+**Live closed loop** (``ControlLoop``): a periodic discrete event on the
+simulation clock that *observes* broker lag and windowed arrival/completion
+rates (O(1) counter deltas from the columnar ``MetricRegistry`` and the
+broker), *decides* a target allocation through a pluggable policy —
+``USLPredictivePolicy`` (the paper's predictive scaling: model-inverted
+partition counts with hysteresis and peak clamping) or the
+``ReactiveLagPolicy`` baseline (scale on lag watermarks, knowledge-free) —
+and *acts* by scaling the elastic pilot backend (``Backend.scale_to``),
+resharding the broker (``Broker.repartition``) and repartitioning the
+engine with a state-migration cost event.  Per-run it accumulates the EILC
+report card: allocation/lag traces, SLO-violation ticks and the allocation
+cost integral ∫N dt.
 """
 
 from __future__ import annotations
@@ -27,7 +42,9 @@ import numpy as np
 
 from repro.core.usl import USLFit
 
-__all__ = ["AutoscalePolicy", "Autoscaler"]
+__all__ = ["AutoscalePolicy", "Autoscaler", "ControlObservation",
+           "USLPredictivePolicy", "ReactiveLagPolicy", "StaticPolicy",
+           "ControlLoop"]
 
 
 @dataclass
@@ -39,10 +56,21 @@ class AutoscalePolicy:
 
 
 class Autoscaler:
-    def __init__(self, fit: USLFit, policy: AutoscalePolicy | None = None) -> None:
+    def __init__(self, fit: USLFit, policy: AutoscalePolicy | None = None,
+                 current: int | None = None) -> None:
         self.fit = fit
         self.policy = policy or AutoscalePolicy()
-        self._current = self.policy.min_partitions
+        self._current = (self.policy.min_partitions if current is None
+                         else max(self.policy.min_partitions, int(current)))
+
+    @property
+    def current(self) -> int:
+        """The planner's current allocation (the hysteresis reference)."""
+        return self._current
+
+    @current.setter
+    def current(self, n: int) -> None:
+        self._current = max(self.policy.min_partitions, int(n))
 
     # -- pure queries ----------------------------------------------------------
     def usable_peak_n(self) -> int:
@@ -90,3 +118,213 @@ class Autoscaler:
 
     def plan(self, rate_series) -> list[int]:
         return [self.step(float(r)) for r in rate_series]
+
+
+# ---------------------------------------------------------------------------
+# live closed loop (EILC): observe -> decide -> act, as a periodic DES event
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ControlObservation:
+    """What a control tick sees: the backpressure signal plus windowed
+    rates (counter deltas over the last control interval).
+
+    ``lag`` is *end-to-end* outstanding work (produced − completed): it
+    includes messages still queued in the ingest path, not only
+    appended-but-uncommitted broker lag — per-shard ingest limits mean the
+    broker itself can be the bottleneck, and a controller watching only
+    consumer lag is blind to that backlog."""
+
+    t: float
+    lag: int                   # produced-but-not-completed messages
+    arrival_rate: float        # msgs/s offered (produced) over the last window
+    completion_rate: float     # msgs/s completed over the last window
+    allocation: int            # current granted capacity
+
+
+class USLPredictivePolicy:
+    """Predictive scaling (paper §V): invert the fitted USL model.
+
+    The target allocation is ``partitions_for`` the *demand estimate*,
+    clamped at the USL peak (never into the retrograde region).  Demand is
+    the observed arrival rate plus a backlog-drain term
+    (``lag / catchup_horizon_s`` — capacity to clear the current lag within
+    the horizon), floored by an exponentially decaying memory of recent
+    peak demand (``stabilization_s``) — the standard scale-down
+    stabilization window, which keeps burst-level capacity warm between
+    bursts instead of re-paying the platform's scale-up price (cold starts,
+    HPC queue/grant delay) every cycle.  Scale-up is prompt; scale-down
+    additionally requires the backlog to be cleared (``downscale_lag``) and
+    demand to sit well below current capacity (the planner's hysteresis):
+    releasing workers while lag is outstanding stalls the drain behind
+    fresh grant delays.
+    """
+
+    name = "usl"
+
+    def __init__(self, autoscaler: Autoscaler, catchup_horizon_s: float = 20.0,
+                 downscale_lag: int = 16, stabilization_s: float = 60.0) -> None:
+        self.autoscaler = autoscaler
+        self.catchup_horizon_s = catchup_horizon_s
+        self.downscale_lag = downscale_lag
+        self.stabilization_s = stabilization_s
+        self._demand_floor = 0.0
+        self._last_t: float | None = None
+
+    def decide(self, obs: ControlObservation) -> int:
+        inst = obs.arrival_rate + obs.lag / self.catchup_horizon_s
+        dt = 0.0 if self._last_t is None else max(obs.t - self._last_t, 0.0)
+        self._last_t = obs.t
+        if self.stabilization_s > 0.0:
+            self._demand_floor *= math.exp(-dt / self.stabilization_s)
+            demand = self._demand_floor = max(inst, self._demand_floor)
+        else:
+            demand = inst       # stabilization disabled: track instantly
+        cur = obs.allocation
+        # the live allocation is the planner's state; step() then applies
+        # the prompt-up / hysteresis-down rule (one copy of that logic)
+        self.autoscaler.current = cur
+        want = self.autoscaler.step(demand)
+        if want < cur and obs.lag > self.downscale_lag:
+            return cur        # demand says shrink, backlog says hold
+        return want
+
+
+class ReactiveLagPolicy:
+    """Model-free baseline: scale on lag watermarks alone.
+
+    Up by ``step_up`` when lag crosses ``hi_lag``, down by one when it
+    falls under ``lo_lag`` — the standard threshold autoscaler every
+    streaming platform ships.  It cannot anticipate: capacity only moves
+    *after* lag has already built (or after over-provisioning is already
+    being paid for), which is exactly the gap the USL-predictive policy
+    closes in fig 8.
+    """
+
+    name = "reactive"
+
+    def __init__(self, hi_lag: int = 32, lo_lag: int = 4, step_up: int = 1,
+                 min_partitions: int = 1, max_partitions: int = 256) -> None:
+        self.hi_lag = hi_lag
+        self.lo_lag = lo_lag
+        self.step_up = step_up
+        self.min_partitions = min_partitions
+        self.max_partitions = max_partitions
+
+    def decide(self, obs: ControlObservation) -> int:
+        if obs.lag >= self.hi_lag:
+            return min(obs.allocation + self.step_up, self.max_partitions)
+        if obs.lag <= self.lo_lag:
+            return max(obs.allocation - 1, self.min_partitions)
+        return obs.allocation
+
+
+class StaticPolicy:
+    """No adaptation: hold a fixed allocation (e.g. static-peak
+    provisioning, the serverful strawman fig 8 compares against)."""
+
+    name = "static"
+
+    def __init__(self, partitions: int) -> None:
+        self.partitions = int(partitions)
+
+    def decide(self, obs: ControlObservation) -> int:
+        return self.partitions
+
+
+class ControlLoop:
+    """Closed-loop elastic scaling as a periodic simulation event.
+
+    Each tick: observe (end-to-end lag and windowed arrival/completion
+    rates as O(1) ``MetricRegistry.kind_count`` deltas of the run's
+    ``produce``/``complete`` event columns — see ``ControlObservation`` for
+    why produced−completed, not broker consumer lag, is the backpressure
+    signal), decide (``policy.decide``), act (``Backend.scale_to`` →
+    ``Broker.repartition`` → ``SimStreamingEngine.repartition`` with the
+    state-migration cost ``migration_s_per_delta × |ΔN|``), and account
+    (allocation/lag traces as registry series, SLO-violation ticks where
+    lag exceeds ``slo_lag``, and the cost integral ∫ allocation dt — the
+    container-seconds / core-seconds bill).
+    """
+
+    def __init__(self, sim, broker, topic: str, engine, pilot, policy, *,
+                 metrics, run_id: str,
+                 interval_s: float = 2.0, slo_lag: int = 32,
+                 migration_s_per_delta: float = 0.0) -> None:
+        self.sim = sim
+        self.broker = broker
+        self.topic = topic
+        self.engine = engine
+        self.pilot = pilot
+        self.policy = policy
+        self.metrics = metrics
+        self.run_id = run_id
+        self.interval_s = interval_s
+        self.slo_lag = slo_lag
+        self.migration_s_per_delta = migration_s_per_delta
+        self.allocation = pilot.backend.allocation(pilot)
+        self.ticks = 0
+        self.slo_violations = 0
+        self.scale_events = 0
+        self.cost_integral = 0.0          # ∫ allocation dt
+        self._stopped = False
+        self._last_t = sim.now
+        self._last_produced = metrics.kind_count(run_id, "produce")
+        self._last_completed = metrics.kind_count(run_id, "complete")
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        self.sim.schedule_fast(self.interval_s, self._tick)
+
+    def stop(self) -> None:
+        """Stop ticking and settle the final cost-integral interval."""
+        if not self._stopped:
+            self._account(self.sim.now)
+            self._stopped = True
+
+    # -- the loop ------------------------------------------------------------
+    def _account(self, now: float) -> None:
+        dt = now - self._last_t
+        if dt > 0:
+            self.cost_integral += self.allocation * dt
+        self._last_t = now
+
+    def observe(self) -> ControlObservation:
+        now = self.sim.now
+        produced = self.metrics.kind_count(self.run_id, "produce")
+        completed = self.metrics.kind_count(self.run_id, "complete")
+        dt = max(now - self._last_t, 1e-9)
+        obs = ControlObservation(
+            t=now,
+            lag=max(0, produced - completed),
+            arrival_rate=(produced - self._last_produced) / dt,
+            completion_rate=(completed - self._last_completed) / dt,
+            allocation=self.allocation,
+        )
+        self._last_produced = produced
+        self._last_completed = completed
+        return obs
+
+    def _tick(self) -> None:
+        if self._stopped:
+            return
+        obs = self.observe()
+        self._account(obs.t)
+        self.ticks += 1
+        if obs.lag > self.slo_lag:
+            self.slo_violations += 1
+        self.metrics.observe(f"{self.run_id}/alloc", obs.t, float(obs.allocation))
+        self.metrics.observe(f"{self.run_id}/lag", obs.t, float(obs.lag))
+        target = int(self.policy.decide(obs))
+        if target != self.allocation:
+            granted = self.pilot.backend.scale_to(self.pilot, target)
+            delta = abs(granted - self.allocation)
+            if granted != self.allocation:
+                self.scale_events += 1
+                self.metrics.record(self.run_id, "autoscale", "scale", obs.t,
+                                    frm=self.allocation, to=granted,
+                                    lag=obs.lag, rate=obs.arrival_rate)
+                self.allocation = granted
+                self.broker.repartition(self.topic, granted)
+                self.engine.repartition(self.migration_s_per_delta * delta)
+        self.sim.schedule_fast(self.interval_s, self._tick)

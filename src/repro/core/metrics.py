@@ -176,6 +176,16 @@ class MetricRegistry:
                if (s := get(attrs.get(key))) is not None]
         return np.asarray(out, dtype=np.float64)
 
+    def kind_count(self, run_id: str, kind: str) -> int:
+        """Events of one kind recorded so far — O(columns), not O(events).
+
+        The adaptation control loop computes windowed throughput as the
+        delta of this counter between control ticks, so observation cost
+        stays independent of trace length."""
+        return sum(len(col.rows)
+                   for (rid, _comp, knd), col in list(self._cols.items())
+                   if rid == run_id and knd == kind)
+
     def kind_timestamps(self, run_id: str, kind: str) -> np.ndarray:
         """Sorted timestamps of one event kind (the throughput primitive)."""
         rows = self._kind_rows(run_id, kind)

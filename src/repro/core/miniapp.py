@@ -13,6 +13,13 @@ complexity is the centroid count c ∈ [128, 8192].  The distance phase is
 O(n·c·d); ``IMPL_OVERHEAD`` calibrates raw FLOPs to an effective
 sklearn-MiniBatchKMeans rate (Python/numpy overhead ≈ 8×).
 
+Adaptation mode (paper §V): ``AdaptationExperiment`` / ``run_adaptation``
+run the same pipeline under an *open-loop* time-varying rate program with a
+live ``ControlLoop`` (see ``core.autoscale``) elastically resizing the
+backend, resharding the broker and repartitioning the engine mid-run —
+returning allocation/lag traces, SLO violations and the ∫N dt cost
+integral instead of a steady-state throughput point.
+
 Model-sharing consistency policy (see DESIGN.md §2): the paper's measured
 Dask sigma ∈ [0.6, 1.0] — "the peak scalability of the system is already
 reached with a single partition" — is mechanically consistent only with the
@@ -25,20 +32,35 @@ StreamInsight recommends, and ``lock_free`` is the serverless behaviour
 
 from __future__ import annotations
 
+import math
+
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.autoscale import (AutoscalePolicy, Autoscaler, ControlLoop,
+                                  ReactiveLagPolicy, StaticPolicy,
+                                  USLPredictivePolicy)
 from repro.core.metrics import MetricRegistry, new_run_id, percentile_summary
+from repro.core.usl import USLFit
 from repro.pilot.api import (PilotComputeService, PilotDescription, State,
                              TaskProfile)
 from repro.streaming.broker import Broker
 from repro.streaming.engine import SimStreamingEngine, Workload
 from repro.streaming.producer import (AIMD, PartitionIngest, SharedFsIngest,
-                                      SyntheticProducer)
+                                      SyntheticProducer, rate_program_from_spec)
 
 __all__ = ["StreamExperiment", "ExperimentResult", "KMeansStreamWorkload",
-           "run_experiment", "POINT_BYTES", "KMEANS_DIM"]
+           "run_experiment", "AdaptationExperiment", "AdaptationResult",
+           "run_adaptation", "default_consistency", "POINT_BYTES",
+           "KMEANS_DIM"]
+
+
+def default_consistency(machine: str) -> str:
+    """Platform-default model-sharing consistency policy: S3 is
+    last-writer-wins (lock-free), the shared filesystem serializes the
+    full partial_fit (the paper's measured Dask behaviour)."""
+    return "lock_free" if machine == "serverless" else "full_fit_locked"
 
 KMEANS_DIM = 9          # 9 float32 dims + header ≈ 37 B/point (paper: 296 KB / 8,000 pts)
 POINT_BYTES = 37
@@ -90,19 +112,12 @@ class KMeansStreamWorkload:
 
 
 @dataclass
-class StreamExperiment:
-    """One cell of the paper's parameter space."""
+class _PlatformCell:
+    """Shared platform axis of every experiment cell: the machine plus its
+    derived resource URL and consistency-policy default (subclasses declare
+    the ``policy`` field this reads)."""
 
     machine: str = "serverless"         # serverless | wrangler | stampede2
-    partitions: int = 4                 # N^px(p) == N^br(p) (paper constraint)
-    points: int = 8000                  # message size knob (MS)
-    centroids: int = 1024               # workload complexity knob (WC)
-    memory_mb: int = 3008               # Lambda container memory
-    n_messages: int = 200
-    policy: str | None = None           # None → platform default
-    seed: int = 0
-    batch_max: int = 1                  # paper: one Lambda invocation per message
-    backend_attrs: dict = field(default_factory=dict)
 
     @property
     def resource_url(self) -> str:
@@ -113,7 +128,22 @@ class StreamExperiment:
     def effective_policy(self) -> str:
         if self.policy is not None:
             return self.policy
-        return "lock_free" if self.machine == "serverless" else "full_fit_locked"
+        return default_consistency(self.machine)
+
+
+@dataclass
+class StreamExperiment(_PlatformCell):
+    """One cell of the paper's parameter space."""
+
+    partitions: int = 4                 # N^px(p) == N^br(p) (paper constraint)
+    points: int = 8000                  # message size knob (MS)
+    centroids: int = 1024               # workload complexity knob (WC)
+    memory_mb: int = 3008               # Lambda container memory
+    n_messages: int = 200
+    policy: str | None = None           # None → platform default
+    seed: int = 0
+    batch_max: int = 1                  # paper: one Lambda invocation per message
+    backend_attrs: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -152,6 +182,227 @@ def steady_state_throughput(metrics: MetricRegistry, run_id: str,
     API compatibility."""
     return metrics.steady_state_throughput(run_id, "complete",
                                            warmup_frac=warmup_frac)
+
+
+# ---------------------------------------------------------------------------
+# adaptation experiments (EILC): characterize -> model -> *adapt*
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AdaptationExperiment(_PlatformCell):
+    """One closed-loop elastic-scaling cell: a rate trace in, allocation and
+    lag traces + SLO violations + cost integral out.
+
+    ``rate`` is a JSON-able rate-program spec (see
+    ``streaming.producer.rate_program_from_spec``) — rate traces are a
+    first-class design axis, like partitions or message size in
+    ``StreamExperiment``.  ``scaling_policy`` picks the controller:
+    ``"usl"`` (predictive, needs the fitted ``usl_sigma/kappa/gamma`` from
+    a characterization sweep), ``"reactive"`` (lag-threshold baseline) or
+    ``"static"`` (no loop; ``static_partitions``, default the ceiling —
+    static-peak provisioning).  ``policy`` remains the model-sharing
+    consistency knob, as in ``StreamExperiment``.
+    """
+
+    scaling_policy: str = "usl"        # usl | reactive | static
+    rate: dict = field(default_factory=lambda: dict(
+        kind="step", base_hz=2.0, high_hz=12.0, t_step=40.0))
+    horizon_s: float = 120.0
+    initial_partitions: int = 2
+    max_partitions: int = 16
+    static_partitions: int | None = None
+    usl_sigma: float | None = None     # fitted USL model for the predictive
+    usl_kappa: float | None = None     # policy (from StreamInsight.fit_models)
+    usl_gamma: float | None = None
+    control_interval_s: float = 2.0
+    slo_lag: int = 32
+    catchup_horizon_s: float = 20.0
+    stabilization_s: float = 60.0      # scale-down stabilization window
+    headroom: float = 0.15
+    migration_s_per_delta: float = 0.05
+    points: int = 8000                 # message size knob (MS)
+    centroids: int = 1024              # workload complexity knob (WC)
+    memory_mb: int = 3008
+    policy: str | None = None          # model-sharing consistency
+    batch_max: int = 1
+    seed: int = 0
+    backend_attrs: dict = field(default_factory=dict)
+
+    def cost_estimate(self) -> float:
+        """Work estimate for the serial-vs-pooled auto-switch (same units
+        as ``StreamExperiment``'s ``n_messages × points × centroids``)."""
+        msgs = rate_program_from_spec(self.rate).mean_messages(0.0, self.horizon_s)
+        return msgs * self.points * self.centroids
+
+
+@dataclass
+class AdaptationResult:
+    """EILC report card for one adaptation cell."""
+
+    experiment: AdaptationExperiment
+    run_id: str
+    slo_violations: int                # control ticks with lag > slo_lag
+    ticks: int
+    cost_integral: float               # ∫ allocation dt (capacity-seconds)
+    scale_events: int
+    produced: int
+    processed: int
+    throughput: float                  # completions/s over the whole run
+    latency_px: dict                   # percentile summary of L^px
+    alloc_trace: list                  # [[t, allocation], ...]
+    lag_trace: list                    # [[t, lag], ...]
+    final_allocation: int = 1
+    drained: bool = True
+    drain_s: float = 0.0               # time past the horizon to empty lag
+    wall_virtual_s: float = 0.0
+    des_events: int = 0
+
+    def record(self) -> dict:
+        e = self.experiment
+        return dict(machine=e.machine, scaling_policy=e.scaling_policy,
+                    rate_kind=e.rate.get("kind", "?"), horizon_s=e.horizon_s,
+                    slo_violations=self.slo_violations, ticks=self.ticks,
+                    violation_frac=self.slo_violations / max(self.ticks, 1),
+                    cost_integral=self.cost_integral,
+                    scale_events=self.scale_events,
+                    produced=self.produced, processed=self.processed,
+                    throughput=self.throughput,
+                    latency_px_p95=self.latency_px.get("p95", float("nan")),
+                    final_allocation=self.final_allocation,
+                    drained=self.drained, drain_s=self.drain_s)
+
+
+def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
+    if exp.scaling_policy == "usl":
+        if None in (exp.usl_sigma, exp.usl_kappa, exp.usl_gamma):
+            raise ValueError(
+                "usl scaling policy needs usl_sigma/usl_kappa/usl_gamma "
+                "(fit a characterization sweep first — StreamInsight.fit_models)")
+        fit = USLFit(sigma=exp.usl_sigma, kappa=exp.usl_kappa,
+                     gamma=exp.usl_gamma, r2=1.0, rmse=0.0, n_obs=0)
+        scaler = Autoscaler(fit, AutoscalePolicy(
+            headroom=exp.headroom, max_partitions=exp.max_partitions,
+            min_partitions=1), current=initial)
+        return USLPredictivePolicy(scaler,
+                                   catchup_horizon_s=exp.catchup_horizon_s,
+                                   downscale_lag=max(4, exp.slo_lag // 2),
+                                   stabilization_s=exp.stabilization_s)
+    if exp.scaling_policy == "reactive":
+        return ReactiveLagPolicy(hi_lag=exp.slo_lag,
+                                 lo_lag=max(1, exp.slo_lag // 8),
+                                 min_partitions=1,
+                                 max_partitions=exp.max_partitions)
+    if exp.scaling_policy == "static":
+        return StaticPolicy(initial)
+    raise ValueError(f"unknown scaling_policy {exp.scaling_policy!r}")
+
+
+def run_adaptation(exp: AdaptationExperiment,
+                   metrics: MetricRegistry | None = None) -> AdaptationResult:
+    """Execute one closed-loop adaptation cell on the virtual clock.
+
+    Builds the same producer → broker → engine pipeline as
+    ``run_experiment``, but the producer is *open-loop* (the rate program is
+    the externally imposed incoming data rate) and a ``ControlLoop``
+    periodically resizes the elastic backend, reshards the broker and
+    repartitions the engine.  Deterministic given ``exp.seed`` — two runs
+    of the same cell produce bit-identical traces.
+    """
+    metrics = metrics if metrics is not None else MetricRegistry()
+    run_id = new_run_id(f"adapt-{exp.machine}-{exp.scaling_policy}")
+
+    static_n = (exp.static_partitions if exp.static_partitions is not None
+                else exp.max_partitions)
+    initial = static_n if exp.scaling_policy == "static" else exp.initial_partitions
+    initial = max(1, min(initial, exp.max_partitions))
+
+    pcs = PilotComputeService(seed=exp.seed)
+    pilot = pcs.submit_pilot(PilotDescription(
+        resource=exp.resource_url, memory_mb=exp.memory_mb,
+        partitions=initial, concurrency=initial,
+        attrs=dict(exp.backend_attrs)))
+    backend = pilot.backend
+    sim = backend.sim
+
+    broker = Broker()
+    topic = "points"
+    broker.create_topic(topic, initial)
+
+    # per-allocation cost profiles: coherence peers track the LIVE
+    # allocation, so scaling up genuinely buys (and pays for) more peers
+    profiles: dict[int, TaskProfile] = {}
+
+    def profile_for(msgs) -> TaskProfile:
+        n = loop.allocation
+        prof = profiles.get(n)
+        if prof is None:
+            prof = profiles[n] = KMeansStreamWorkload(
+                points=exp.points, centroids=exp.centroids,
+                policy=exp.effective_policy, n_partitions=n).profile()
+        return prof
+
+    workload = Workload(profile_for=profile_for, name="kmeans-adapt")
+
+    if exp.machine == "serverless":
+        # shard ceiling pre-provisioned: Kinesis resharding moves routing,
+        # idle shards cost nothing in the ingest model
+        ingest = PartitionIngest(sim, exp.max_partitions, bw_per_partition=1e6)
+    else:
+        ingest = SharedFsIngest(sim, backend.shared_resource(pilot, "fs"))
+
+    wl_bytes = exp.points * POINT_BYTES
+
+    def msg_factory(i: int):
+        return (None, {"n_points": exp.points, "seed": exp.seed * 100003 + i},
+                wl_bytes)
+
+    program = rate_program_from_spec(exp.rate)
+    cap = int(program.mean_messages(0.0, exp.horizon_s) * 2 + 1000)
+    producer = SyntheticProducer(
+        sim, broker, topic, msg_factory=msg_factory, n_messages=cap,
+        run_id=run_id, metrics=metrics, rate_program=program,
+        horizon_s=exp.horizon_s, ingest=ingest)
+    engine = SimStreamingEngine(
+        sim, broker, topic, pilot, workload, metrics, run_id,
+        batch_max=exp.batch_max, is_input_complete=lambda: producer.done)
+    loop = ControlLoop(
+        sim, broker, topic, engine, pilot,
+        _make_scaling_policy(exp, initial),
+        metrics=metrics, run_id=run_id, interval_s=exp.control_interval_s,
+        slo_lag=exp.slo_lag,
+        migration_s_per_delta=exp.migration_s_per_delta)
+
+    producer.start()
+    engine.start()
+    loop.start()
+    max_virtual = exp.horizon_s * 6.0 + 600.0
+    sim.run_until(t=sim.now + max_virtual, predicate=engine.is_finished)
+    drained = engine.is_finished()
+    loop.stop()
+
+    lat_px = metrics.latencies(run_id, "append", "complete")
+    wall = max(sim.now, 1e-9)
+    result = AdaptationResult(
+        experiment=exp,
+        run_id=run_id,
+        slo_violations=loop.slo_violations,
+        ticks=loop.ticks,
+        cost_integral=loop.cost_integral,
+        scale_events=loop.scale_events,
+        produced=producer.sent,
+        processed=engine.core.processed,
+        throughput=engine.core.processed / wall,
+        latency_px=percentile_summary(lat_px),
+        alloc_trace=metrics.series(f"{run_id}/alloc").tolist(),
+        lag_trace=metrics.series(f"{run_id}/lag").tolist(),
+        final_allocation=loop.allocation,
+        drained=drained,
+        drain_s=max(0.0, sim.now - exp.horizon_s),
+        wall_virtual_s=sim.now,
+        des_events=sim.events_processed,
+    )
+    pcs.close()
+    return result
 
 
 def run_experiment(exp: StreamExperiment, metrics: MetricRegistry | None = None,

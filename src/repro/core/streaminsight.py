@@ -47,6 +47,19 @@ when you need raw per-event traces; pooled sweeps surface merged summaries.
 
 An optional on-disk ``ResultCache`` keyed by the experiment dataclass makes
 re-runs of a sweep free.
+
+Beyond the paper's characterize-then-model workflow, StreamInsight closes
+the EILC loop (§V future work): ``AdaptationDesign`` /
+``StreamInsight.run_adaptation`` execute *adaptation cells*
+(``AdaptationExperiment``: a time-varying rate trace in → allocation trace,
+lag trace, SLO-violation count and cost integral out) where a live
+``ControlLoop`` resizes the elastic backends mid-run.  Predictive cells are
+parameterized automatically from the USL models fitted on this insight's
+own characterization sweep, so ``run(design)`` →
+``run_adaptation(adaptation_design)`` is the paper's full characterize →
+model → adapt pipeline in two calls.  Adaptation cells ride the same
+``run_cells`` pool, auto-switch and typed ``ResultCache`` as
+characterization cells.
 """
 
 from __future__ import annotations
@@ -62,17 +75,22 @@ import os
 import threading
 from dataclasses import dataclass, field
 from pathlib import Path
+from typing import Any
 
 import numpy as np
 
 from repro.core.metrics import MetricRegistry
-from repro.core.miniapp import ExperimentResult, StreamExperiment, run_experiment
+from repro.core.miniapp import (AdaptationExperiment, AdaptationResult,
+                                ExperimentResult, StreamExperiment,
+                                default_consistency, run_adaptation,
+                                run_experiment)
 from repro.core.usl import USLFit, fit_usl_batch, fit_usl_ragged, rmse
 
-__all__ = ["ExperimentDesign", "ScenarioModel", "StreamInsight", "ResultCache",
-           "run_cells", "estimated_cost", "PARALLEL_COST_THRESHOLD"]
+__all__ = ["ExperimentDesign", "AdaptationDesign", "ScenarioModel",
+           "StreamInsight", "ResultCache", "run_cells", "estimated_cost",
+           "PARALLEL_COST_THRESHOLD"]
 
-_CACHE_VERSION = 1
+_CACHE_VERSION = 2     # v2: typed cells (adaptation experiments join the cache)
 
 
 @dataclass
@@ -112,45 +130,130 @@ class ExperimentDesign:
         return out
 
 
+@dataclass
+class AdaptationDesign:
+    """Grid of closed-loop adaptation cells (the EILC design space).
+
+    The cartesian axes are machine × scaling policy × rate trace; the
+    workload/SLO knobs are shared.  ``experiments(usl_params=...)`` fills
+    each machine's fitted USL coefficients into the predictive cells —
+    ``StreamInsight.run_adaptation`` does that automatically from the
+    models it fitted on the characterization sweep (characterize → model →
+    adapt, end to end).
+    """
+
+    machines: list = field(default_factory=lambda: ["serverless", "wrangler"])
+    scaling_policies: list = field(
+        default_factory=lambda: ["usl", "reactive", "static"])
+    rates: list = field(default_factory=lambda: [
+        dict(kind="step", base_hz=2.0, high_hz=12.0, t_step=40.0)])
+    horizon_s: float = 120.0
+    initial_partitions: int = 2
+    max_partitions: int = 16
+    static_partitions: int | None = None
+    control_interval_s: float = 2.0
+    slo_lag: int = 32
+    migration_s_per_delta: float = 0.05
+    points: int = 8000
+    centroids: int = 1024
+    memory_mb: int = 3008
+    policy: str | None = None      # model-sharing consistency
+    batch_max: int = 1
+    seed: int = 0
+
+    def experiments(self, usl_params: dict | None = None) -> list[AdaptationExperiment]:
+        """``usl_params``: machine → (sigma, kappa, gamma) for the
+        predictive cells (other policies ignore it)."""
+        usl_params = usl_params or {}
+        out = []
+        for m, sp, rate in itertools.product(self.machines,
+                                             self.scaling_policies, self.rates):
+            sigma = kappa = gamma = None
+            if sp == "usl":
+                if m not in usl_params:
+                    raise ValueError(
+                        f"no USL params for machine {m!r}: run a "
+                        "characterization sweep first (or pass usl_params)")
+                sigma, kappa, gamma = usl_params[m]
+            out.append(AdaptationExperiment(
+                machine=m, scaling_policy=sp, rate=dict(rate),
+                horizon_s=self.horizon_s,
+                initial_partitions=self.initial_partitions,
+                max_partitions=self.max_partitions,
+                static_partitions=self.static_partitions,
+                usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma,
+                control_interval_s=self.control_interval_s,
+                slo_lag=self.slo_lag,
+                migration_s_per_delta=self.migration_s_per_delta,
+                points=self.points, centroids=self.centroids,
+                memory_mb=self.memory_mb, policy=self.policy,
+                batch_max=self.batch_max, seed=self.seed))
+        return out
+
+
 # -- cell execution: cache + process pool -------------------------------------
 
 _RESULT_FIELDS = ("run_id", "throughput", "latency_px", "latency_br",
                   "runtime_summary", "processed", "failed", "retried",
                   "wall_virtual_s", "des_events")
 
+_ADAPT_RESULT_FIELDS = ("run_id", "slo_violations", "ticks", "cost_integral",
+                        "scale_events", "produced", "processed", "throughput",
+                        "latency_px", "alloc_trace", "lag_trace",
+                        "final_allocation", "drained", "drain_s",
+                        "wall_virtual_s", "des_events")
+
+# cell-type registry: run_cells / ResultCache dispatch on the experiment
+# dataclass, so characterization and adaptation cells share the runner,
+# pool, and on-disk memo.  name -> (experiment cls, result cls, fields, fn)
+_CELL_TYPES = {
+    "StreamExperiment": (StreamExperiment, ExperimentResult,
+                         _RESULT_FIELDS, run_experiment),
+    "AdaptationExperiment": (AdaptationExperiment, AdaptationResult,
+                             _ADAPT_RESULT_FIELDS, run_adaptation),
+}
+
+
+def _execute(exp, registry: MetricRegistry):
+    """Run one cell of whichever registered type."""
+    return _CELL_TYPES[type(exp).__name__][3](exp, registry)
+
 
 class ResultCache:
-    """On-disk memo of ``ExperimentResult``s keyed by the experiment
-    dataclass (all fields, stable-JSON-hashed), so re-running a sweep only
-    pays for cells whose parameters changed."""
+    """On-disk memo of experiment results keyed by the experiment dataclass
+    (cell type + all fields, stable-JSON-hashed), so re-running a sweep only
+    pays for cells whose parameters changed.  Holds both characterization
+    (``ExperimentResult``) and adaptation (``AdaptationResult``) cells."""
 
     def __init__(self, root: str | Path) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
     @staticmethod
-    def key(exp: StreamExperiment) -> str:
+    def key(exp) -> str:
         payload = json.dumps(dataclasses.asdict(exp), sort_keys=True,
                              default=repr)
-        digest = hashlib.sha256(f"v{_CACHE_VERSION}:{payload}".encode())
+        digest = hashlib.sha256(
+            f"v{_CACHE_VERSION}:{type(exp).__name__}:{payload}".encode())
         return digest.hexdigest()[:24]
 
-    def path(self, exp: StreamExperiment) -> Path:
+    def path(self, exp) -> Path:
         return self.root / f"{self.key(exp)}.json"
 
-    def get(self, exp: StreamExperiment) -> ExperimentResult | None:
+    def get(self, exp):
         path = self.path(exp)
         if not path.exists():
             return None
         try:
             doc = json.loads(path.read_text())
-            return ExperimentResult(
-                experiment=StreamExperiment(**doc["experiment"]),
-                **{k: doc[k] for k in _RESULT_FIELDS})
+            exp_cls, res_cls, fields, _fn = _CELL_TYPES[
+                doc.get("cell_type", "StreamExperiment")]
+            return res_cls(experiment=exp_cls(**doc["experiment"]),
+                           **{k: doc[k] for k in fields})
         except (KeyError, TypeError, ValueError, json.JSONDecodeError):
             return None          # stale/corrupt entry: fall through to a run
 
-    def _tmp_path(self, exp: StreamExperiment) -> Path:
+    def _tmp_path(self, exp) -> Path:
         """Writer-unique staging file: two processes (or threads) sharing a
         cache dir must never clobber each other's in-flight tmp before the
         atomic ``replace``."""
@@ -158,9 +261,12 @@ class ResultCache:
         return final.with_name(
             f"{final.name}.{os.getpid()}-{threading.get_ident()}.tmp")
 
-    def put(self, exp: StreamExperiment, res: ExperimentResult) -> None:
-        doc = {"experiment": dataclasses.asdict(res.experiment)}
-        doc.update({k: getattr(res, k) for k in _RESULT_FIELDS})
+    def put(self, exp, res) -> None:
+        cell_type = type(exp).__name__
+        fields = _CELL_TYPES[cell_type][2]
+        doc = {"cell_type": cell_type,
+               "experiment": dataclasses.asdict(res.experiment)}
+        doc.update({k: getattr(res, k) for k in fields})
         try:
             payload = json.dumps(doc)
         except TypeError:
@@ -171,14 +277,14 @@ class ResultCache:
         tmp.replace(self.path(exp))
 
 
-def _run_cell_chunk(exps: list[StreamExperiment]) -> list[tuple[ExperimentResult, dict]]:
+def _run_cell_chunk(exps: list) -> list[tuple]:
     """Pool worker: a contiguous chunk of cells, one private registry per
     cell (results are self-contained); each cell also ships back its
     compact trace summary for the caller's registry."""
     out = []
     for exp in exps:
         registry = MetricRegistry()
-        res = run_experiment(exp, registry)
+        res = _execute(exp, registry)
         out.append((res, registry.export_summary()))
     return out
 
@@ -213,10 +319,16 @@ _pool_workers = 0
 PARALLEL_COST_THRESHOLD = 2e11
 
 
-def estimated_cost(experiments: list[StreamExperiment]) -> float:
-    """Work estimate driving the serial-vs-pooled auto-switch."""
-    return float(sum(e.n_messages * e.points * e.centroids
-                     for e in experiments))
+def estimated_cost(experiments: list) -> float:
+    """Work estimate driving the serial-vs-pooled auto-switch.  Adaptation
+    cells expose ``cost_estimate()`` (expected messages from the rate-trace
+    integral × per-message work); characterization cells use the historical
+    ``n_messages × points × centroids``."""
+    total = 0.0
+    for e in experiments:
+        est = getattr(e, "cost_estimate", None)
+        total += est() if est is not None else e.n_messages * e.points * e.centroids
+    return float(total)
 
 
 def _get_pool(workers: int) -> concurrent.futures.ProcessPoolExecutor:
@@ -253,7 +365,7 @@ def _use_pool(parallel, pending: list[tuple[int, StreamExperiment]]) -> bool:
     return estimated_cost([exp for _i, exp in pending]) >= PARALLEL_COST_THRESHOLD
 
 
-def run_cells(experiments: list[StreamExperiment], *,
+def run_cells(experiments: list, *,
               metrics: MetricRegistry | None = None,
               parallel: bool | str = "auto",
               max_workers: int | None = None,
@@ -276,7 +388,7 @@ def run_cells(experiments: list[StreamExperiment], *,
         cache = ResultCache(cache)
     notify = on_result or (lambda exp, res: None)
     results: dict[int, ExperimentResult] = {}
-    pending: list[tuple[int, StreamExperiment]] = []
+    pending: list[tuple[int, Any]] = []
     for i, exp in enumerate(experiments):
         hit = cache.get(exp) if cache is not None else None
         if hit is not None:
@@ -317,7 +429,7 @@ def run_cells(experiments: list[StreamExperiment], *,
                 chunks = [grp for grp in chunks if grp]
     else:
         for i, exp in pending:
-            results[i] = run_experiment(
+            results[i] = _execute(
                 exp, metrics if metrics is not None else MetricRegistry())
             notify(exp, results[i])
     if cache is not None:
@@ -358,6 +470,7 @@ class StreamInsight:
         self.cache = ResultCache(cache_dir) if cache_dir is not None else None
         self.max_workers = max_workers
         self.results: list[ExperimentResult] = []
+        self.adaptation_results: list[AdaptationResult] = []
 
     # -- execution -----------------------------------------------------------
     def run(self, design: ExperimentDesign, verbose: bool = False,
@@ -378,6 +491,57 @@ class StreamInsight:
 
     def records(self) -> list[dict]:
         return [r.record() for r in self.results]
+
+    # -- adaptation (EILC: characterize -> model -> adapt) --------------------
+    def usl_params(self, *, points: int = 8000, centroids: int = 1024,
+                   memory_mb: int = 3008, policy: str | None = None,
+                   batch_max: int = 1) -> dict:
+        """Per-machine fitted (sigma, kappa, gamma) for the scenario
+        matching the given workload knobs, from this insight's
+        characterization results."""
+        out = {}
+        for m in self.fit_models():
+            machine, p, c, mem, pol, bm = m.key
+            eff = policy if policy is not None else default_consistency(machine)
+            if (p, c, mem, bm) == (points, centroids, memory_mb, batch_max) \
+                    and pol == eff:
+                out[machine] = (m.fit.sigma, m.fit.kappa, m.fit.gamma)
+        return out
+
+    def run_adaptation(self, design: AdaptationDesign | list, *,
+                       verbose: bool = False,
+                       parallel: bool | str = "auto") -> list[AdaptationResult]:
+        """Execute adaptation cells (a design grid or an explicit list).
+
+        For a design, predictive cells are parameterized automatically from
+        the USL models fitted on this insight's characterization sweep —
+        the full paper §V loop in two calls: ``run(design)`` then
+        ``run_adaptation(adaptation_design)``.
+        """
+        if isinstance(design, AdaptationDesign):
+            params = self.usl_params(
+                points=design.points, centroids=design.centroids,
+                memory_mb=design.memory_mb, policy=design.policy,
+                batch_max=design.batch_max) \
+                if "usl" in design.scaling_policies else {}
+            cells = design.experiments(usl_params=params)
+        else:
+            cells = list(design)
+
+        def progress(exp, res):
+            print(f"  ran {exp.machine} {exp.scaling_policy:>8} "
+                  f"rate={exp.rate.get('kind')} -> "
+                  f"viol={res.slo_violations}/{res.ticks} "
+                  f"cost={res.cost_integral:.0f}", flush=True)
+
+        batch = run_cells(cells, metrics=self.metrics, parallel=parallel,
+                          max_workers=self.max_workers, cache=self.cache,
+                          on_result=progress if verbose else None)
+        self.adaptation_results.extend(batch)
+        return batch
+
+    def adaptation_records(self) -> list[dict]:
+        return [r.record() for r in self.adaptation_results]
 
     # -- modeling --------------------------------------------------------------
     @staticmethod

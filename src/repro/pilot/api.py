@@ -268,6 +268,22 @@ class Backend:
         raise LookupError(
             f"backend {self.scheme!r} exposes no shared resource {name!r}")
 
+    # -- elasticity (the EILC hook: Pilot-Streaming's dynamic resource-
+    # -- container management) ----------------------------------------------
+    def scale_to(self, pilot: Pilot, n: int) -> int:
+        """Grow/shrink the pilot's execution capacity to ``n`` units
+        mid-run (containers on serverless, workers on HPC).  Returns the
+        *granted* target (backends may clamp, e.g. the Lambda concurrency
+        cap).  Growth is asynchronous where the platform makes it so:
+        serverless containers pay a cold start on first invocation, HPC
+        workers become usable only after the scheduler's queue/grant
+        delay.  Static backends raise ``NotImplementedError``."""
+        raise NotImplementedError(f"backend {self.scheme!r} is not elastic")
+
+    def allocation(self, pilot: Pilot) -> int:
+        """Current target capacity (execution units) of the pilot."""
+        raise NotImplementedError(f"backend {self.scheme!r} is not elastic")
+
     def cancel_pilot(self, pilot: Pilot) -> None:
         pass
 

@@ -49,6 +49,7 @@ DEFAULTS = dict(
     fs_meta_latency=0.008,  # Lustre metadata/open cost per peer file
     jitter_cv=0.08,         # shared-environment noise
     net_bw=1.1e9,           # node NIC, bytes/s (per flow, before FS sharing)
+    grant_delay_s=10.0,     # scheduler queue wait before a grown worker runs
 )
 
 
@@ -57,6 +58,8 @@ class _Worker:
     wid: int
     busy: bool = False
     alive: bool = True
+    pending: bool = False   # granted? elastic growth waits out the queue
+    retired: bool = False   # released back to the scheduler by a scale-down
     queue: deque = field(default_factory=deque)
 
 
@@ -84,8 +87,59 @@ class HpcSimBackend(Backend):
             "sched_queue": deque(),
             "sched_busy": False,
             "rr": 0,
+            "target": max(1, n_workers),
+            "mapping": None,     # cached non-retired worker list
         }
         pilot.state = State.RUNNING
+
+    # -- elasticity ----------------------------------------------------------
+    def _mapping(self, st: dict) -> list[_Worker]:
+        """Non-retired workers, in wid order — the partition → worker map.
+        Dead (killed) workers stay in the map so pinned dispatch to them
+        keeps failing fast (the engine's unpin-and-retry path owns that)."""
+        m = st["mapping"]
+        if m is None:
+            m = st["mapping"] = [w for w in st["workers"] if not w.retired]
+        return m
+
+    def scale_to(self, pilot: Pilot, n: int) -> int:
+        """Elastic worker pool with HPC semantics: growth submits new
+        workers to the batch scheduler and they only start accepting work
+        after ``grant_delay_s`` (queue wait + node grant); work pinned to a
+        not-yet-granted worker queues on it and waits the grant out.
+        Shrink releases the most recently granted workers back to the
+        scheduler: running tasks finish, queued ones are reassigned under
+        the new mapping."""
+        st = self._pilots[pilot.uid]
+        n = max(1, int(n))
+        st["target"] = n
+        workers = st["workers"]
+        active = [w for w in workers if not w.retired]
+        if n > len(active):
+            for _ in range(n - len(active)):
+                w = _Worker(len(workers), pending=True)
+                workers.append(w)
+
+                def grant(w: _Worker = w) -> None:
+                    w.pending = False
+                    self._pump_worker(pilot, w)
+
+                self.sim.schedule_fast(st["cfg"]["grant_delay_s"], grant)
+        elif n < len(active):
+            victims = active[n:]
+            for w in victims:
+                w.retired = True
+            st["mapping"] = None
+            for w in victims:
+                orphans = [cu for cu in w.queue if not cu.state.is_final]
+                w.queue.clear()
+                for cu in orphans:
+                    self._assign(pilot, cu)
+        st["mapping"] = None
+        return n
+
+    def allocation(self, pilot: Pilot) -> int:
+        return self._pilots[pilot.uid]["target"]
 
     def cancel_pilot(self, pilot: Pilot) -> None:
         st = self._pilots.get(pilot.uid)
@@ -151,26 +205,32 @@ class HpcSimBackend(Backend):
 
     def _assign(self, pilot: Pilot, cu: ComputeUnit) -> None:
         st = self._pilots[pilot.uid]
-        workers = st["workers"]
+        mapping = self._mapping(st)
         if cu.desc.partition is not None:
-            # pinned: no need to materialize the alive-worker list per task
-            w = workers[cu.desc.partition % len(workers)]
+            # pinned: modulo over the non-retired mapping (identical to the
+            # raw worker list until the first elastic scale-down)
+            w = mapping[cu.desc.partition % len(mapping)]
             if not w.alive:
                 cu._set_failed(self.sim.now, ConnectionError(
                     f"worker {w.wid} for partition {cu.desc.partition} is dead"))
                 return
         else:
-            alive = [w for w in workers if w.alive]
+            alive = [w for w in mapping if w.alive]
             if not alive:
                 cu._set_failed(self.sim.now, ConnectionError("no alive workers"))
                 return
-            w = min(alive, key=lambda w: (len(w.queue) + (1 if w.busy else 0), w.wid))
+            # not-yet-granted workers rank last: queueing real work on a
+            # node still in the batch queue only helps if everyone else is
+            # loaded deeper than the grant delay is long
+            w = min(alive, key=lambda w: (w.pending,
+                                          len(w.queue) + (1 if w.busy else 0),
+                                          w.wid))
         w.queue.append(cu)
         self._pump_worker(pilot, w)
 
     # -- worker execution: compute + shared-FS I/O + coherence -----------------
     def _pump_worker(self, pilot: Pilot, w: _Worker) -> None:
-        if w.busy or not w.queue or not w.alive:
+        if w.busy or w.pending or not w.queue or not w.alive:
             return
         cu = w.queue.popleft()
         if cu.state.is_final:

@@ -89,8 +89,37 @@ class ServerlessSimBackend(Backend):
             # round-robining the whole pool cold
             "free": deque(containers),
             "queue": deque(),
+            "target": len(containers),
+            "next_cid": len(containers),
         }
         pilot.state = State.RUNNING
+
+    # -- elasticity ----------------------------------------------------------
+    def scale_to(self, pilot: Pilot, n: int) -> int:
+        """Elastic concurrency: grow the container pool with *fresh* (cold)
+        containers, shrink by retiring idle ones immediately and busy ones
+        as they finish.  New containers pay ``cold_start_s`` on their first
+        invocation — the per-container scale-up price the control loop's
+        cost/SLO traces must account for.  Clamped to [1, max_containers]."""
+        st = self._pilots[pilot.uid]
+        n = max(1, min(int(n), int(st["cfg"]["max_containers"])))
+        st["target"] = n
+        containers, free = st["containers"], st["free"]
+        # shrink: retire from the TAIL of the free pool (the coldest end —
+        # recently warmed containers at the head keep serving)
+        while len(containers) > n and free:
+            containers.remove(free.pop())
+        # grow: fresh containers join cold; they warm on first use
+        while len(containers) < n:
+            c = _Container(st["next_cid"])
+            st["next_cid"] += 1
+            containers.append(c)
+            free.append(c)
+        self._dispatch(pilot)
+        return n
+
+    def allocation(self, pilot: Pilot) -> int:
+        return self._pilots[pilot.uid]["target"]
 
     def cancel_pilot(self, pilot: Pilot) -> None:
         st = self._pilots.get(pilot.uid)
@@ -167,7 +196,12 @@ class ServerlessSimBackend(Backend):
 
         def finish() -> None:
             container.busy = False
-            st["free"].appendleft(container)
+            if len(st["containers"]) > st["target"]:
+                # a scale-down landed while this container was busy: retire
+                # it now instead of returning it to the pool
+                st["containers"].remove(container)
+            else:
+                st["free"].appendleft(container)
             if dt > pilot.desc.walltime_s:
                 cu._set_failed(self.sim.now, TimeoutError(
                     f"walltime {pilot.desc.walltime_s}s exceeded (needed {dt:.1f}s)"))

@@ -81,6 +81,7 @@ class Broker:
         # controller reads it once per produced message
         self._appended_total: dict[str, int] = {}
         self._committed_total: dict[tuple[str, str], int] = {}
+        self._active: dict[str, int] = {}   # open (routable) partition count
 
     # -- topic admin -------------------------------------------------------
     def create_topic(self, name: str, partitions: int) -> None:
@@ -92,9 +93,37 @@ class Broker:
             self._topics[name] = [_Partition() for _ in range(partitions)]
             self._rr[name] = 0
             self._appended_total[name] = 0
+            self._active[name] = partitions
 
     def num_partitions(self, topic: str) -> int:
+        """Partitions new messages route to (Kinesis: open shards)."""
+        return self._active[topic]
+
+    def total_partitions(self, topic: str) -> int:
+        """All partitions ever created, including sealed ones — consumers
+        must keep draining sealed partitions' backlogs."""
         return len(self._topics[topic])
+
+    def repartition(self, topic: str, partitions: int) -> int:
+        """Live resharding (Kinesis shard split/merge semantics).
+
+        Growing appends fresh partitions; shrinking *seals* the tail
+        partitions: their logs stay addressable (offsets never move) and
+        consumers drain the remaining backlog, but new messages only route
+        to the first ``partitions`` actives.  Returns the new active count.
+        Data is never dropped — any state-migration *cost* of moving keyed
+        state between partitions is modeled by the caller (the control
+        loop charges the engine a migration pause; see
+        ``SimStreamingEngine.repartition``).
+        """
+        with self._lock:
+            if partitions < 1:
+                raise ValueError("partitions must be >= 1")
+            parts = self._topics[topic]
+            while len(parts) < partitions:
+                parts.append(_Partition())
+            self._active[topic] = partitions
+            return partitions
 
     def topics(self) -> list[str]:
         return sorted(self._topics)
@@ -102,7 +131,7 @@ class Broker:
     # -- produce ------------------------------------------------------------
     def partition_for(self, topic: str, key: Any) -> int:
         with self._lock:
-            n = len(self._topics[topic])
+            n = self._active[topic]
             if key is None:
                 p = self._rr[topic] % n
                 self._rr[topic] += 1
@@ -173,6 +202,12 @@ class Broker:
         with self._lock:
             return (self._appended_total[topic]
                     - self._committed_total.get((group, topic), 0))
+
+    def appended_total(self, topic: str) -> int:
+        """Messages ever appended to ``topic`` — O(1).  The control loop's
+        windowed arrival-rate observation is the delta of this counter."""
+        with self._lock:
+            return self._appended_total[topic]
 
     def total_messages(self, topic: str) -> int:
         with self._lock:

@@ -184,6 +184,7 @@ class SimStreamingEngine:
         self.is_input_complete = is_input_complete or (lambda: False)
         self._appended_seen = 0
         self._inflight_n = 0
+        self._paused_until = 0.0       # state-migration dispatch pause
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -229,6 +230,36 @@ class SimStreamingEngine:
         if not self.is_finished():
             raise TimeoutError("engine did not drain the topic in time")
 
+    # -- live repartitioning (EILC: the control loop resizes N mid-run) -------
+    def repartition(self, migration_s: float = 0.0) -> None:
+        """Adopt the broker's current partition count mid-run.
+
+        Newly created partitions get consumer state and start draining as
+        appends land; sealed partitions keep draining their backlog until
+        empty.  ``migration_s`` charges the state-migration cost of moving
+        keyed state between partitions as a real DES event: dispatch is
+        paused for that long (in-flight batches finish; new dispatches
+        wait), then every partition is re-drained.
+        """
+        core = self.core
+        total = core.broker.total_partitions(core.topic)
+        while len(core.parts) < total:
+            core.parts.append(_PartitionState())
+        core.n_partitions = total
+        if migration_s > 0.0:
+            core.metrics.record(core.run_id, "engine", "migrate", self.sim.now,
+                                duration=migration_s, partitions=total)
+            resume_at = self.sim.now + migration_s
+            if resume_at > self._paused_until:
+                self._paused_until = resume_at
+                self.sim.schedule_fast(migration_s, self._resume)
+
+    def _resume(self) -> None:
+        if self.sim.now < self._paused_until:
+            return     # superseded by a longer, later migration pause
+        for p in range(len(self.core.parts)):
+            self._drain(p)
+
     # -- push-dispatched partition consumer -----------------------------------
     def _drain(self, partition: int) -> None:
         """Dispatch the next pending batch of ``partition``, if idle.
@@ -238,6 +269,11 @@ class SimStreamingEngine:
         event is scheduled on the hot path.
         """
         core = self.core
+        if self.sim.now < self._paused_until:
+            return     # migrating: the resume sweep re-drains every partition
+        if partition >= len(core.parts):
+            # append raced ahead of the control loop's repartition call
+            self.repartition()
         ps = core.parts[partition]
         if ps.inflight:
             return

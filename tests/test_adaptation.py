@@ -1,0 +1,295 @@
+"""EILC adaptation loop: rate programs, elastic backends, live control loop.
+
+Covers the closed-loop subsystem end to end: composable time-varying rate
+programs (production matches the trace integral), elastic ``scale_to``
+semantics on both simulated platforms (cold starts on serverless growth,
+queue/grant delay on HPC growth), broker live resharding, the state-
+migration pause in the engine, control-loop convergence on a step trace,
+and determinism of whole adaptation cells.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.autoscale import (Autoscaler, AutoscalePolicy,
+                                  ControlObservation, ReactiveLagPolicy,
+                                  StaticPolicy, USLPredictivePolicy)
+from repro.core.metrics import MetricRegistry
+from repro.core.miniapp import AdaptationExperiment, run_adaptation
+from repro.core.usl import USLFit
+from repro.pilot.api import (ComputeUnitDescription, PilotComputeService,
+                             PilotDescription, TaskProfile)
+from repro.sim.des import Simulator
+from repro.streaming.broker import Broker
+from repro.streaming.producer import (BurstyRate, ConstantRate, DiurnalRate,
+                                      RampRate, RateProgram, StepRate,
+                                      SyntheticProducer,
+                                      rate_program_from_spec)
+
+# fitted serverless scenario model (pts=8000, c=1024; see fig8's
+# characterization pass) — constants so these tests stay sweep-free
+USL_SERVERLESS = dict(usl_sigma=0.0, usl_kappa=3.0e-4, usl_gamma=1.94)
+
+STEP = dict(kind="step", base_hz=2.0, high_hz=12.0, t_step=40.0)
+
+
+# -- rate programs -----------------------------------------------------------
+
+def test_rate_program_exact_integrals():
+    assert ConstantRate(5.0).mean_messages(10, 30) == pytest.approx(100.0)
+    step = StepRate(2.0, 20.0, t_step=30.0)
+    assert step.mean_messages(0, 60) == pytest.approx(2 * 30 + 20 * 30)
+    ramp = RampRate(2.0, 10.0, t0=10.0, t1=50.0)
+    assert ramp.mean_messages(0, 60) == pytest.approx(2 * 10 + 6 * 40 + 10 * 10)
+    diurnal = DiurnalRate(10.0, 0.5, period_s=60.0)
+    assert diurnal.mean_messages(0, 60) == pytest.approx(600.0)   # full period
+    # every exact integral agrees with the generic numeric fallback
+    for prog in (step, ramp, diurnal, BurstyRate(2.0, 25.0, 8.0, 30.0, seed=1)):
+        exact = prog.mean_messages(3.0, 97.0)
+        numeric = RateProgram.mean_messages(prog, 3.0, 97.0)
+        assert exact == pytest.approx(numeric, rel=0.05)
+
+
+def test_rate_program_composition_and_specs():
+    a = rate_program_from_spec({"kind": "constant", "rate_hz": 3.0})
+    b = rate_program_from_spec(STEP)
+    combo = a + 2.0 * b
+    assert combo.rate(50.0) == pytest.approx(3.0 + 2 * 12.0)
+    assert combo.mean_messages(0, 60) == pytest.approx(
+        a.mean_messages(0, 60) + 2 * b.mean_messages(0, 60))
+    via_spec = rate_program_from_spec(
+        {"kind": "sum", "parts": [
+            {"kind": "constant", "rate_hz": 3.0},
+            {"kind": "scale", "factor": 2.0, "part": dict(STEP)}]})
+    for t in (0.0, 35.0, 45.0, 59.0):
+        assert via_spec.rate(t) == pytest.approx(combo.rate(t))
+    with pytest.raises(ValueError):
+        rate_program_from_spec({"kind": "nope"})
+    with pytest.raises(ValueError):
+        rate_program_from_spec("not a spec")
+
+
+def test_bursty_rate_deterministic_from_seed():
+    a = BurstyRate(2.0, 10.0, 10.0, 25.0, seed=7)
+    b = BurstyRate(2.0, 10.0, 10.0, 25.0, seed=7)
+    ts = np.linspace(0.0, 300.0, 600)
+    assert [a.rate(float(t)) for t in ts] == [b.rate(float(t)) for t in ts]
+    assert a.mean_messages(0, 300) == pytest.approx(b.mean_messages(0, 300))
+
+
+def test_open_loop_producer_matches_trace_integral():
+    """Produced message count over the horizon tracks ∫ r dt."""
+    sim = Simulator(seed=0)
+    broker = Broker()
+    broker.create_topic("t", 4)
+    program = rate_program_from_spec(STEP)
+    horizon = 120.0
+    producer = SyntheticProducer(
+        sim, broker, "t", msg_factory=lambda i: (None, i, 100),
+        n_messages=10_000, run_id="r", metrics=MetricRegistry(),
+        rate_program=program, horizon_s=horizon)
+    producer.start()
+    sim.run()
+    expected = program.mean_messages(0.0, horizon)
+    assert producer.sent == pytest.approx(expected, rel=0.05)
+    assert producer.done and producer.appended == producer.sent
+
+
+# -- elastic scale_to ---------------------------------------------------------
+
+def _pilot(resource, partitions):
+    pcs = PilotComputeService(seed=0)
+    pilot = pcs.submit_pilot(PilotDescription(
+        resource=resource, partitions=partitions, concurrency=partitions))
+    return pcs, pilot
+
+
+def test_serverless_scale_up_pays_cold_starts():
+    pcs, pilot = _pilot("serverless://aws-sim", 2)
+    backend = pilot.backend
+    prof = TaskProfile(flops=1e9)
+    cus = [pilot.submit_compute_unit(ComputeUnitDescription(profile=prof))
+           for _ in range(2)]
+    pilot.wait_all(None)
+    assert all(cu.attrs["cold"] for cu in cus)          # first round: all cold
+    assert backend.scale_to(pilot, 4) == 4
+    cus2 = [pilot.submit_compute_unit(ComputeUnitDescription(profile=prof))
+            for _ in range(4)]
+    pilot.wait_all(None)
+    colds = sorted((cu.attrs["container"], cu.attrs["cold"]) for cu in cus2)
+    # surviving containers are warm; the two grown ones pay a cold start
+    assert colds == [(0, False), (1, False), (2, True), (3, True)]
+    # cold containers really are slower on first use
+    cold_rt = [cu.runtime for cu in cus2 if cu.attrs["cold"]]
+    warm_rt = [cu.runtime for cu in cus2 if not cu.attrs["cold"]]
+    assert min(cold_rt) > max(warm_rt)
+
+
+def test_serverless_scale_down_retires_containers():
+    pcs, pilot = _pilot("serverless://aws-sim", 4)
+    backend = pilot.backend
+    prof = TaskProfile(flops=1e8)
+    for _ in range(4):
+        pilot.submit_compute_unit(ComputeUnitDescription(profile=prof))
+    pilot.wait_all(None)
+    backend.scale_to(pilot, 1)
+    assert backend.allocation(pilot) == 1
+    cus = [pilot.submit_compute_unit(ComputeUnitDescription(profile=prof))
+           for _ in range(3)]
+    pilot.wait_all(None)
+    assert len({cu.attrs["container"] for cu in cus}) == 1   # pool of one
+
+
+def test_hpc_scale_up_waits_out_grant_delay():
+    pcs, pilot = _pilot("hpc://wrangler-sim", 1)
+    backend = pilot.backend
+    prof = TaskProfile(flops=1e9)
+    pilot.submit_compute_unit(ComputeUnitDescription(profile=prof)).wait(None)
+    t0 = backend.sim.now
+    backend.scale_to(pilot, 2)
+    cu = pilot.submit_compute_unit(
+        ComputeUnitDescription(profile=prof, partition=1))
+    cu.wait(None)
+    grant = backend._pilots[pilot.uid]["cfg"]["grant_delay_s"]
+    assert cu.start_ts >= t0 + grant       # queued until the scheduler grant
+
+
+def test_hpc_scale_down_requeues_orphans():
+    pcs, pilot = _pilot("hpc://wrangler-sim", 4)
+    backend = pilot.backend
+    prof = TaskProfile(flops=2e9)
+    cus = [pilot.submit_compute_unit(
+        ComputeUnitDescription(profile=prof, partition=p)) for p in range(8)]
+    backend.scale_to(pilot, 2)
+    pilot.wait_all(None)
+    assert all(cu.state.name == "DONE" for cu in cus)    # nothing lost
+    assert backend.allocation(pilot) == 2
+
+
+# -- broker resharding + engine migration ------------------------------------
+
+def test_broker_repartition_grow_and_seal():
+    broker = Broker()
+    broker.create_topic("t", 2)
+    broker.repartition("t", 4)
+    assert broker.num_partitions("t") == 4
+    assert broker.total_partitions("t") == 4
+    # shrink seals: routing covers only the active prefix, logs survive
+    broker.append("t", "x", ts=0.0, partition=3)
+    broker.repartition("t", 2)
+    assert broker.num_partitions("t") == 2
+    assert broker.total_partitions("t") == 4
+    assert {broker.partition_for("t", None) for _ in range(8)} == {0, 1}
+    assert broker.end_offset("t", 3) == 1      # sealed log still addressable
+    assert broker.appended_total("t") == 1
+    with pytest.raises(ValueError):
+        broker.repartition("t", 0)
+
+
+def test_engine_migration_pause_recorded_and_drains():
+    exp = AdaptationExperiment(
+        machine="serverless", scaling_policy="usl", rate=dict(STEP),
+        horizon_s=60.0, max_partitions=16, migration_s_per_delta=0.2,
+        seed=0, **USL_SERVERLESS)
+    metrics = MetricRegistry()
+    res = run_adaptation(exp, metrics)
+    assert res.drained and res.scale_events > 0
+    migrations = metrics.events(res.run_id, kind="migrate")
+    assert migrations, "scale events must charge a migration cost event"
+    assert all(ev.attrs["duration"] > 0 for ev in migrations)
+    assert res.processed == res.produced
+
+
+# -- control loop -------------------------------------------------------------
+
+def _usl_policy(initial=2, max_partitions=16, **kw):
+    fit = USLFit(sigma=0.0, kappa=3e-4, gamma=1.94, r2=1.0, rmse=0.0, n_obs=0)
+    scaler = Autoscaler(fit, AutoscalePolicy(max_partitions=max_partitions),
+                        current=initial)
+    return USLPredictivePolicy(scaler, **kw)
+
+
+def test_control_loop_converges_on_step_trace():
+    """After the step the loop settles inside the hysteresis band and never
+    provisions past the USL peak."""
+    exp = AdaptationExperiment(
+        machine="serverless", scaling_policy="usl", rate=dict(STEP),
+        horizon_s=120.0, max_partitions=16, seed=0, **USL_SERVERLESS)
+    res = run_adaptation(exp)
+    alloc = np.array(res.alloc_trace)
+    lag = np.array(res.lag_trace)
+    fit = USLFit(sigma=exp.usl_sigma, kappa=exp.usl_kappa,
+                 gamma=exp.usl_gamma, r2=1.0, rmse=0.0, n_obs=0)
+    peak = Autoscaler(fit, AutoscalePolicy(
+        max_partitions=exp.max_partitions)).usable_peak_n()
+    assert alloc[:, 1].max() <= peak                    # never past the peak
+    assert res.drained and res.slo_violations == 0
+    # settled: allocation constant over the last quarter of the horizon,
+    # and above the pre-step allocation
+    tail = alloc[alloc[:, 0] > 0.75 * exp.horizon_s][:, 1]
+    pre = alloc[alloc[:, 0] < 35.0][:, 1]
+    assert len(set(tail)) == 1
+    assert tail[0] > pre.max()
+    assert lag[-1, 1] <= exp.slo_lag
+
+
+def test_predictive_policy_holds_capacity_under_backlog():
+    policy = _usl_policy(initial=8, downscale_lag=16, stabilization_s=0.0)
+    hold = policy.decide(ControlObservation(
+        t=10.0, lag=200, arrival_rate=1.0, completion_rate=5.0, allocation=8))
+    assert hold == 8          # demand says shrink, backlog says hold
+    down = policy.decide(ControlObservation(
+        t=12.0, lag=0, arrival_rate=1.0, completion_rate=5.0, allocation=8))
+    assert down < 8           # backlog cleared: hysteresis allows release
+
+
+def test_reactive_and_static_policies():
+    reactive = ReactiveLagPolicy(hi_lag=32, lo_lag=4, max_partitions=8)
+    up = reactive.decide(ControlObservation(
+        t=0.0, lag=50, arrival_rate=5.0, completion_rate=2.0, allocation=3))
+    down = reactive.decide(ControlObservation(
+        t=2.0, lag=0, arrival_rate=1.0, completion_rate=1.0, allocation=3))
+    hold = reactive.decide(ControlObservation(
+        t=4.0, lag=16, arrival_rate=1.0, completion_rate=1.0, allocation=3))
+    assert (up, down, hold) == (4, 2, 3)
+    static = StaticPolicy(5)
+    assert static.decide(ControlObservation(
+        t=0.0, lag=999, arrival_rate=50.0, completion_rate=0.0,
+        allocation=5)) == 5
+
+
+def test_adaptation_cell_bit_identical_under_fixed_seed():
+    exp = AdaptationExperiment(
+        machine="wrangler", scaling_policy="reactive",
+        rate=dict(kind="burst", base_hz=1.0, burst_hz=6.0, burst_len_s=10.0,
+                  mean_gap_s=25.0, seed=3),
+        horizon_s=90.0, max_partitions=8, policy="update_locked", seed=1)
+    a = run_adaptation(exp)
+    b = run_adaptation(exp)
+    assert a.alloc_trace == b.alloc_trace
+    assert a.lag_trace == b.lag_trace
+    assert a.cost_integral == b.cost_integral
+    assert a.slo_violations == b.slo_violations
+    assert a.des_events == b.des_events
+
+
+def test_adaptation_requires_usl_params_for_predictive():
+    with pytest.raises(ValueError, match="usl"):
+        run_adaptation(AdaptationExperiment(
+            machine="serverless", scaling_policy="usl", horizon_s=10.0))
+
+
+def test_adaptation_cells_cache_and_cost_estimate(tmp_path):
+    from repro.core.streaminsight import ResultCache, estimated_cost
+    exp = AdaptationExperiment(
+        machine="serverless", scaling_policy="static", rate=dict(STEP),
+        horizon_s=30.0, max_partitions=4, seed=0)
+    assert estimated_cost([exp]) > 0
+    res = run_adaptation(exp)
+    cache = ResultCache(tmp_path)
+    cache.put(exp, res)
+    roundtrip = cache.get(exp)
+    assert roundtrip is not None
+    assert dataclasses.asdict(roundtrip) == dataclasses.asdict(res)

@@ -103,6 +103,40 @@ def test_forward_sharded_matches_single_device():
     assert "PASS" in out
 
 
+def test_shard_map_compat_resolves_both_api_spellings(monkeypatch):
+    """The compat helper must work on BOTH jax API generations: new
+    (``jax.shard_map``, ``check_vma``) and legacy
+    (``jax.experimental.shard_map.shard_map``, ``check_rep``) — the exact
+    version skew that kept three sharding tests red at the seed."""
+    import jax
+
+    from repro.distributed import sharding
+
+    calls = {}
+
+    def fake_new_api(fn, *, mesh, in_specs, out_specs, **kw):
+        calls.update(kw)
+        return lambda *a: "new-api"
+
+    # new-API spelling: jax.shard_map present -> helper forwards check_vma
+    monkeypatch.setattr(jax, "shard_map", fake_new_api, raising=False)
+    fn = sharding.shard_map(lambda x: x, mesh=None, in_specs=(),
+                            out_specs=(), check_vma=False)
+    assert fn() == "new-api" and calls == {"check_vma": False}
+
+    # legacy spelling: no jax.shard_map -> experimental path, check_rep.
+    # jax's deprecation module raises AttributeError for absent names, so
+    # deleting the injected attribute restores the legacy environment.
+    monkeypatch.delattr(jax, "shard_map")
+    import jax.numpy as jnp
+    mesh = jax.make_mesh((1,), ("model",))
+    from jax.sharding import PartitionSpec as P
+    doubled = sharding.shard_map(
+        lambda x: 2.0 * x, mesh=mesh, in_specs=P(None), out_specs=P(None),
+        check_vma=False)(jnp.ones(4))
+    assert float(doubled.sum()) == 8.0
+
+
 @pytest.mark.slow
 def test_elastic_mesh_reslice():
     """Pilot-level elasticity: re-slice devices into different mesh shapes."""
