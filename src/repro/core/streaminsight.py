@@ -90,7 +90,7 @@ __all__ = ["ExperimentDesign", "AdaptationDesign", "ScenarioModel",
            "StreamInsight", "ResultCache", "run_cells", "estimated_cost",
            "PARALLEL_COST_THRESHOLD"]
 
-_CACHE_VERSION = 2     # v2: typed cells (adaptation experiments join the cache)
+_CACHE_VERSION = 3     # v3: online-refit/threaded-engine adaptation fields
 
 
 @dataclass
@@ -160,16 +160,24 @@ class AdaptationDesign:
     policy: str | None = None      # model-sharing consistency
     batch_max: int = 1
     seed: int = 0
+    engine: str = "sim"            # sim | threaded (wall clock)
+    drift_t_s: float | None = None  # mid-run per-message cost shift ...
+    drift_factor: float = 1.0       # ... by this multiplier
+    refit_interval_s: float = 10.0  # usl_online knobs (see miniapp)
+    refit_window: int = 128
+    refit_half_life_s: float = 45.0
+    threaded_service_s: float | None = None
 
     def experiments(self, usl_params: dict | None = None) -> list[AdaptationExperiment]:
         """``usl_params``: machine → (sigma, kappa, gamma) for the
-        predictive cells (other policies ignore it)."""
+        predictive cells, both frozen (``"usl"``) and online re-fitting
+        (``"usl_online"``) (other policies ignore it)."""
         usl_params = usl_params or {}
         out = []
         for m, sp, rate in itertools.product(self.machines,
                                              self.scaling_policies, self.rates):
             sigma = kappa = gamma = None
-            if sp == "usl":
+            if sp in ("usl", "usl_online"):
                 if m not in usl_params:
                     raise ValueError(
                         f"no USL params for machine {m!r}: run a "
@@ -187,7 +195,13 @@ class AdaptationDesign:
                 migration_s_per_delta=self.migration_s_per_delta,
                 points=self.points, centroids=self.centroids,
                 memory_mb=self.memory_mb, policy=self.policy,
-                batch_max=self.batch_max, seed=self.seed))
+                batch_max=self.batch_max, seed=self.seed,
+                engine=self.engine,
+                drift_t_s=self.drift_t_s, drift_factor=self.drift_factor,
+                refit_interval_s=self.refit_interval_s,
+                refit_window=self.refit_window,
+                refit_half_life_s=self.refit_half_life_s,
+                threaded_service_s=self.threaded_service_s))
         return out
 
 
@@ -201,7 +215,7 @@ _ADAPT_RESULT_FIELDS = ("run_id", "slo_violations", "ticks", "cost_integral",
                         "scale_events", "produced", "processed", "throughput",
                         "latency_px", "alloc_trace", "lag_trace",
                         "final_allocation", "drained", "drain_s",
-                        "wall_virtual_s", "des_events")
+                        "wall_virtual_s", "des_events", "refits")
 
 # cell-type registry: run_cells / ResultCache dispatch on the experiment
 # dataclass, so characterization and adaptation cells share the runner,
@@ -519,11 +533,12 @@ class StreamInsight:
         ``run_adaptation(adaptation_design)``.
         """
         if isinstance(design, AdaptationDesign):
+            needs_usl = any(sp in ("usl", "usl_online")
+                            for sp in design.scaling_policies)
             params = self.usl_params(
                 points=design.points, centroids=design.centroids,
                 memory_mb=design.memory_mb, policy=design.policy,
-                batch_max=design.batch_max) \
-                if "usl" in design.scaling_policies else {}
+                batch_max=design.batch_max) if needs_usl else {}
             cells = design.experiments(usl_params=params)
         else:
             cells = list(design)

@@ -227,7 +227,8 @@ def _grid_seed(n, t, w, fixed_gamma):
     return params
 
 
-def _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol, keep_history):
+def _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol, keep_history,
+                     seed_params=None):
     """Batched LM refinement from the vectorized grid seed.
 
     Per-scenario damping ``lam`` and an ``active`` mask reproduce the
@@ -235,10 +236,22 @@ def _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol, keep_history):
     *attempt* per still-active scenario (accept → lam/3, reject → lam*4),
     and scenarios leave the batch on convergence, damping blow-up, or a
     singular normal matrix — so converged fits stop paying.
+
+    ``seed_params`` (S, 3) warm-starts LM from a caller-supplied
+    (sigma, kappa, gamma) per scenario instead of the grid seed — the
+    online re-fitting path starts each refit from the previous fit, so a
+    refit pays only the LM polish, not the full grid broadcast.
     """
     S, P = t.shape
     free_gamma = fixed_gamma is None
-    params = _grid_seed(n, t, w, fixed_gamma)
+    if seed_params is None:
+        params = _grid_seed(n, t, w, fixed_gamma)
+    else:
+        params = np.array(seed_params, dtype=np.float64, copy=True)
+        params[:, 0] = np.clip(params[:, 0], 0.0, 1.0)
+        params[:, 1] = np.maximum(params[:, 1], 0.0)
+        params[:, 2] = (np.maximum(params[:, 2], _GAMMA_MIN) if free_gamma
+                        else np.asarray(fixed_gamma, dtype=np.float64))
     res = _usl_batch_eval(n, params[:, 0], params[:, 1], params[:, 2]) - t
     sse = (w * res * res).sum(axis=1)
     lam = np.full(S, _LAM_INIT)
@@ -277,7 +290,10 @@ def _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol, keep_history):
                 except np.linalg.LinAlgError:
                     singular[j] = True
         cand = p + step
-        cand[:, 0] = np.maximum(cand[:, 0], 0.0)
+        # sigma is a serial *fraction*: clamp to [0, 1] (an unconstrained
+        # LM step on noisy saturated data can wander past 1, which models
+        # negative capacity growth from N=1 and breaks peak reasoning)
+        cand[:, 0] = np.clip(cand[:, 0], 0.0, 1.0)
         cand[:, 1] = np.maximum(cand[:, 1], 0.0)
         cand[:, 2] = (np.maximum(cand[:, 2], _GAMMA_MIN) if free_gamma
                       else p[:, 2])
@@ -358,7 +374,7 @@ def _jax_fit_fn(free_gamma: bool, max_iter: int):
             diag = jnp.maximum(jnp.diag(jtj), 1e-12)
             step = jnp.linalg.solve(jtj + lam * jnp.diag(diag), -jtr)
             cand = p + step
-            cand = cand.at[0].set(jnp.maximum(cand[0], 0.0))
+            cand = cand.at[0].set(jnp.clip(cand[0], 0.0, 1.0))
             cand = cand.at[1].set(jnp.maximum(cand[1], 0.0))
             cand = cand.at[2].set(jnp.maximum(cand[2], _GAMMA_MIN)
                                   if free_gamma else p[2])
@@ -400,11 +416,16 @@ def _fit_batch_jax(n, t, w, fixed_gamma, max_iter, tol):
     return p[:, 0], p[:, 1], gamma
 
 
-def _dispatch_fit(backend, n, t, w, fixed_gamma, max_iter, tol, keep_history):
+def _dispatch_fit(backend, n, t, w, fixed_gamma, max_iter, tol, keep_history,
+                  seed_params=None):
     if backend == "numpy":
         return _fit_batch_numpy(n, t, w, fixed_gamma, max_iter, tol,
-                                keep_history)
+                                keep_history, seed_params)
     if backend == "jax":
+        if seed_params is not None:
+            raise ValueError(
+                "seed_params warm starts are numpy-only; the jax path "
+                "always runs its own grid seed")
         sig, kap, gam = _fit_batch_jax(n, t, w, fixed_gamma, max_iter, tol)
         return sig, kap, gam, None
     raise ValueError(f"unknown backend {backend!r}; expected 'numpy' or 'jax'")
@@ -454,6 +475,7 @@ def fit_usl_batch(
     bootstrap: int = 0,
     bootstrap_seed: int = 0,
     ci_level: float = 0.95,
+    seed_params=None,
 ) -> list[USLFit]:
     """Fit the USL to S scenarios at once.
 
@@ -475,6 +497,11 @@ def fit_usl_batch(
     bootstrap : number of bootstrap resamples per scenario (0 = off).
         Populates ``sigma_ci``/``kappa_ci``/``peak_n_ci`` with ``ci_level``
         percentile intervals.
+    seed_params : optional ``(S, 3)`` per-scenario (sigma, kappa, gamma)
+        warm start.  Skips the grid seed and runs LM from the given point —
+        the online re-fitting loop passes its previous fit here so each
+        refit costs only the polish iterations (numpy backend only;
+        bootstrap resamples still seed from the grid).
 
     Returns one ``USLFit`` per scenario, in input order.
     """
@@ -519,8 +546,15 @@ def fit_usl_batch(
         fixed_gamma = (wm * t).sum(axis=1) / wm.sum(axis=1) / n_min
         fixed_gamma = np.maximum(fixed_gamma, _GAMMA_MIN)
 
+    if seed_params is not None:
+        seed_params = np.asarray(seed_params, dtype=np.float64)
+        if seed_params.shape != (S, 3):
+            raise ValueError(
+                f"seed_params must have shape ({S}, 3), got {seed_params.shape}")
+
     sigma, kappa, gamma, histories = _dispatch_fit(
-        backend, n, t, w, fixed_gamma, max_iter, tol, keep_history)
+        backend, n, t, w, fixed_gamma, max_iter, tol, keep_history,
+        seed_params)
 
     pred = _usl_batch_eval(n, sigma, kappa, gamma)
     wsum = w.sum(axis=1)

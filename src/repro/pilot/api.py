@@ -284,6 +284,14 @@ class Backend:
         """Current target capacity (execution units) of the pilot."""
         raise NotImplementedError(f"backend {self.scheme!r} is not elastic")
 
+    def effective_allocation(self, pilot: Pilot) -> int:
+        """Capacity actually *granted* right now, which can trail the
+        target: HPC workers grown mid-run wait out the scheduler's
+        queue/grant delay, busy containers survive a shrink until their
+        task finishes.  The online USL estimator attributes observed rates
+        to this, not the target.  Defaults to ``allocation``."""
+        return self.allocation(pilot)
+
     def cancel_pilot(self, pilot: Pilot) -> None:
         pass
 

@@ -141,6 +141,14 @@ class HpcSimBackend(Backend):
     def allocation(self, pilot: Pilot) -> int:
         return self._pilots[pilot.uid]["target"]
 
+    def effective_allocation(self, pilot: Pilot) -> int:
+        """Workers granted by the batch scheduler: grown workers still in
+        the queue (``pending``) don't count until ``grant_delay_s``
+        elapses — the window where the target runs ahead of reality and a
+        capacity observation must not be credited to the target N."""
+        return sum(1 for w in self._pilots[pilot.uid]["workers"]
+                   if not w.retired and not w.pending)
+
     def cancel_pilot(self, pilot: Pilot) -> None:
         st = self._pilots.get(pilot.uid)
         if st:

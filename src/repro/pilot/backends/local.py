@@ -1,7 +1,17 @@
 """Local backend: real in-process execution on a thread pool (wall clock).
 
-Used by the quickstart/serving examples and integration tests; it is the
-"cloud VM / login node" analogue — no simulation, callables actually run.
+Used by the quickstart/serving examples, the wall-clock adaptation path and
+integration tests; it is the "cloud VM / login node" analogue — no
+simulation, callables actually run.
+
+Elasticity: the pool's thread count is fixed at pilot start (the physical
+ceiling, like a node's core count), but the *admitted* concurrency is a
+capacity counter that ``scale_to`` moves live — tasks beyond the current
+capacity queue on a condition variable until a slot frees or the capacity
+grows.  Grants are immediate (``effective_allocation == allocation``): a
+login node has no batch queue.  This is what lets the threaded streaming
+engine's ``ControlLoop`` resize a wall-clock run the same way the simulated
+backends resize virtual ones.
 """
 
 from __future__ import annotations
@@ -18,28 +28,55 @@ class LocalBackend(Backend):
 
     def __init__(self, **_kw) -> None:
         self._pools: dict[int, ThreadPoolExecutor] = {}
+        self._caps: dict[int, dict] = {}   # uid -> {capacity, running, ceiling}
         self._cv = threading.Condition()
 
     def start_pilot(self, pilot: Pilot) -> None:
         workers = pilot.desc.concurrency or (
             pilot.desc.number_of_nodes * pilot.desc.cores_per_node)
-        self._pools[pilot.uid] = ThreadPoolExecutor(max_workers=max(1, workers))
+        workers = max(1, workers)
+        self._pools[pilot.uid] = ThreadPoolExecutor(max_workers=workers)
+        self._caps[pilot.uid] = {"capacity": workers, "running": 0,
+                                 "ceiling": workers}
         pilot.state = State.RUNNING
+
+    # -- elasticity ----------------------------------------------------------
+    def scale_to(self, pilot: Pilot, n: int) -> int:
+        """Move the admitted concurrency, clamped to [1, pool size]."""
+        with self._cv:
+            st = self._caps[pilot.uid]
+            st["capacity"] = max(1, min(int(n), st["ceiling"]))
+            self._cv.notify_all()
+            return st["capacity"]
+
+    def allocation(self, pilot: Pilot) -> int:
+        with self._cv:
+            return self._caps[pilot.uid]["capacity"]
 
     def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
         cu.submit_ts = time.perf_counter()
         cu.state = State.PENDING
         pool = self._pools[pilot.uid]
+        st = self._caps[pilot.uid]
 
         def run() -> None:
-            cu._set_running(time.perf_counter())
-            try:
-                out = cu.desc.func(*cu.desc.args, **cu.desc.kwargs) if cu.desc.func else None
-                cu._set_done(time.perf_counter(), out)
-            except BaseException as exc:  # noqa: BLE001 — report task failure
-                cu._set_failed(time.perf_counter(), exc)
             with self._cv:
-                self._cv.notify_all()
+                while st["running"] >= st["capacity"] and not cu.state.is_final:
+                    self._cv.wait(0.1)
+                if cu.state.is_final:       # canceled while queued
+                    return
+                st["running"] += 1
+            try:
+                cu._set_running(time.perf_counter())
+                try:
+                    out = cu.desc.func(*cu.desc.args, **cu.desc.kwargs) if cu.desc.func else None
+                    cu._set_done(time.perf_counter(), out)
+                except BaseException as exc:  # noqa: BLE001 — report task failure
+                    cu._set_failed(time.perf_counter(), exc)
+            finally:
+                with self._cv:
+                    st["running"] -= 1
+                    self._cv.notify_all()
 
         pool.submit(run)
 
@@ -51,6 +88,8 @@ class LocalBackend(Backend):
         for cu in pilot.compute_units:
             if not cu.state.is_final:
                 cu._set_canceled(now)
+        with self._cv:
+            self._cv.notify_all()
 
     def drive_until(self, predicate, timeout) -> None:
         deadline = None if timeout is None else time.perf_counter() + timeout
@@ -64,6 +103,8 @@ class LocalBackend(Backend):
     def close(self) -> None:
         for pool in self._pools.values():
             pool.shutdown(wait=False, cancel_futures=True)
+        with self._cv:
+            self._cv.notify_all()
 
 
 register_backend("local", LocalBackend)

@@ -121,6 +121,12 @@ class ServerlessSimBackend(Backend):
     def allocation(self, pilot: Pilot) -> int:
         return self._pilots[pilot.uid]["target"]
 
+    def effective_allocation(self, pilot: Pilot) -> int:
+        """Containers that exist right now: growth is instant (fresh
+        containers are usable immediately, merely cold), but a shrink's
+        busy containers linger until their in-flight task finishes."""
+        return len(self._pilots[pilot.uid]["containers"])
+
     def cancel_pilot(self, pilot: Pilot) -> None:
         st = self._pilots.get(pilot.uid)
         if st:

@@ -176,6 +176,14 @@ class Broker:
         with self._lock:
             return len(self._topics[topic][partition].log)
 
+    def end_offsets(self, topic: str) -> list[int]:
+        """End offsets of every partition (sealed ones included) under one
+        lock acquisition — the engines' drain checks and the conformance
+        suite's accounting audits read all partitions at once, and a
+        per-partition ``end_offset`` loop re-takes the lock N times."""
+        with self._lock:
+            return [len(p.log) for p in self._topics[topic]]
+
     def commit(self, group: str, topic: str, partition: int, offset: int) -> None:
         """Commit ``offset`` = next offset to read (Kafka semantics)."""
         with self._lock:

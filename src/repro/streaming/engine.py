@@ -34,12 +34,23 @@ Two drivers share this logic:
 hook) powers the benchmarks; ``ThreadedStreamingEngine`` (wall clock, append
 hook sets per-partition wakeup events) powers the real-compute examples on
 the local / jaxmesh backends.
+
+Both drivers implement the ``EngineControlSurface`` protocol
+(``core.autoscale``): ``now()`` / ``call_later()`` expose the engine's
+clock — the DES virtual clock or ``time.perf_counter`` plus a real-time
+ticker thread — and ``repartition()`` adopts the broker's partition count
+mid-run with a migration-cost dispatch pause.  That is the whole surface
+the ``ControlLoop`` needs, so the identical controller closes the loop on
+virtual and wall time.
 """
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import statistics
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -211,15 +222,18 @@ class SimStreamingEngine:
         predicate before *every* event — the seed's per-partition
         ``end_offset`` scan (one broker lock acquisition each) dominated
         reference-cell wall time.  The authoritative per-partition check
-        still runs, but only once the fast path says we are done."""
+        still runs, but only once the fast path says we are done (one
+        bulk ``end_offsets`` read, a single lock acquisition)."""
         core = self.core
         if not self.is_input_complete():
             return False
         if self._inflight_n or core.processed + core.abandoned < self._appended_seen:
             return False
-        return all(ps.next_offset >= core.broker.end_offset(core.topic, i)
-                   and not ps.inflight
-                   for i, ps in enumerate(core.parts))
+        ends = core.broker.end_offsets(core.topic)
+        if len(core.parts) < len(ends):
+            return False     # broker repartition not yet adopted
+        return all(ps.next_offset >= end and not ps.inflight
+                   for ps, end in zip(core.parts, ends))
 
     @property
     def finished(self) -> bool:
@@ -229,6 +243,13 @@ class SimStreamingEngine:
         self.sim.run_until(t=self.sim.now + max_virtual_s, predicate=self.is_finished)
         if not self.is_finished():
             raise TimeoutError("engine did not drain the topic in time")
+
+    # -- control surface (EngineControlSurface) -------------------------------
+    def now(self) -> float:
+        return self.sim.now
+
+    def call_later(self, delay_s: float, fn: Callable[[], None]) -> None:
+        self.sim.schedule_fast(delay_s, fn)
 
     # -- live repartitioning (EILC: the control loop resizes N mid-run) -------
     def repartition(self, migration_s: float = 0.0) -> None:
@@ -345,6 +366,53 @@ class SimStreamingEngine:
             self._drain(partition)
 
 
+class _WallTicker(threading.Thread):
+    """Real-time callback scheduler backing the threaded engine's control
+    surface: a single daemon thread draining a (due, seq, fn) heap under a
+    condition variable.  ``call_later`` is the wall-clock analogue of
+    ``Simulator.schedule_fast`` — the control loop re-arms itself through
+    it every tick.  A callback exception is stored on ``last_error`` (and
+    the ticker keeps running) rather than silently killing the thread."""
+
+    def __init__(self) -> None:
+        super().__init__(daemon=True, name="engine-ticker")
+        self._cv = threading.Condition()
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._stopped = False
+        self.last_error: BaseException | None = None
+
+    def call_later(self, delay_s: float, fn: Callable[[], None]) -> None:
+        with self._cv:
+            heapq.heappush(self._heap,
+                           (time.perf_counter() + max(delay_s, 0.0),
+                            next(self._seq), fn))
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify()
+
+    def run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stopped and (
+                        not self._heap
+                        or self._heap[0][0] > time.perf_counter()):
+                    wait = (None if not self._heap
+                            else max(0.0, self._heap[0][0] - time.perf_counter()))
+                    self._cv.wait(wait)
+                if self._stopped:
+                    return
+                _due, _seq, fn = heapq.heappop(self._heap)
+            try:
+                fn()
+            except Exception as exc:  # noqa: BLE001 — keep ticking
+                if self.last_error is None:   # keep the root cause
+                    self.last_error = exc
+
+
 class ThreadedStreamingEngine:
     """Wall-clock engine: one consumer thread per partition, real compute.
 
@@ -352,6 +420,13 @@ class ThreadedStreamingEngine:
     hook sets, so an idle partition dispatches as soon as data lands instead
     of sleeping out a poll interval (``poll_interval`` remains the bounded
     fallback wait, a safety net against missed wakeups).
+
+    Implements ``EngineControlSurface``: ``now()`` is ``perf_counter``,
+    ``call_later`` schedules on a lazily started real-time ticker thread,
+    and ``repartition`` adopts the broker's partition count mid-run —
+    growing consumer state, wakeup events and (once started) consumer
+    threads, and pausing dispatch for the migration cost, mirroring the
+    virtual-clock engine's semantics on the wall clock.
     """
 
     def __init__(self, broker: Broker, topic: str, pilot: Pilot, workload: Workload,
@@ -364,22 +439,94 @@ class ThreadedStreamingEngine:
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
         self._wakeups = [threading.Event() for _ in range(self.core.n_partitions)]
+        self._ticker: _WallTicker | None = None
+        self._paused_until = 0.0       # state-migration dispatch pause
+        self._started = False
+        # serializes repartition/start against concurrent append callbacks
+        self._admin_lock = threading.Lock()
 
     def start(self) -> None:
-        import time
-        self.core.broker.subscribe(
-            self.core.topic,
-            lambda msg: self._wakeups[msg.partition % len(self._wakeups)].set())
-        for p in range(self.core.n_partitions):
-            t = threading.Thread(target=self._consume, args=(p, time), daemon=True)
+        def on_append(msg) -> None:
+            if msg.partition >= len(self._wakeups):
+                # append raced ahead of the control loop's repartition call
+                self.repartition()
+            self._wakeups[msg.partition].set()
+
+        self.core.broker.subscribe(self.core.topic, on_append)
+        with self._admin_lock:
+            self._started = True
+            self._spawn_consumers()
+
+    def _spawn_consumers(self) -> None:
+        """Start consumer threads for partitions that lack one (caller
+        holds ``_admin_lock``)."""
+        while len(self._threads) < self.core.n_partitions:
+            p = len(self._threads)
+            t = threading.Thread(target=self._consume, args=(p, time),
+                                 daemon=True)
             t.start()
             self._threads.append(t)
+
+    # -- control surface (EngineControlSurface) -------------------------------
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def call_later(self, delay_s: float, fn: Callable[[], None]) -> None:
+        with self._admin_lock:
+            if self._ticker is None:
+                self._ticker = _WallTicker()
+                self._ticker.start()
+            ticker = self._ticker
+        ticker.call_later(delay_s, fn)
+
+    @property
+    def ticker_error(self) -> BaseException | None:
+        """The first exception a ``call_later`` callback raised, if any.
+
+        A failing callback does not kill the ticker thread, but it DOES
+        silently end anything that re-arms itself from inside its own
+        callback (the control loop's tick never reaches its re-schedule
+        line).  Drivers of a control loop must check this after the run —
+        ``run_adaptation(engine="threaded")`` raises on it — otherwise a
+        crashed controller looks like a quiet, successful experiment."""
+        return self._ticker.last_error if self._ticker is not None else None
+
+    def repartition(self, migration_s: float = 0.0) -> None:
+        """Adopt the broker's current partition count mid-run.
+
+        Newly created partitions get consumer state, a wakeup event and
+        (once the engine is started) a consumer thread; sealed partitions
+        keep draining their backlog until empty.  ``migration_s`` charges
+        the keyed-state migration cost as a real-time dispatch pause —
+        in-flight batches finish, new dispatches wait out the pause.
+        """
+        core = self.core
+        with self._admin_lock:
+            total = core.broker.total_partitions(core.topic)
+            while len(core.parts) < total:
+                core.parts.append(_PartitionState())
+            while len(self._wakeups) < total:
+                self._wakeups.append(threading.Event())
+            core.n_partitions = total
+            if migration_s > 0.0:
+                core.metrics.record(core.run_id, "engine", "migrate",
+                                    self.now(), duration=migration_s,
+                                    partitions=total)
+                self._paused_until = max(self._paused_until,
+                                         self.now() + migration_s)
+            if self._started:
+                self._spawn_consumers()
 
     def _consume(self, partition: int, time_mod) -> None:
         core = self.core
         ps = core.parts[partition]
         wakeup = self._wakeups[partition]
         while not self._stop.is_set():
+            pause = self._paused_until - time_mod.perf_counter()
+            if pause > 0:
+                # migrating: interruptible sleep, then re-check
+                self._stop.wait(min(pause, self.poll_interval))
+                continue
             wakeup.clear()
             msgs = core.broker.fetch(core.topic, partition, ps.next_offset, core.batch_max)
             if not msgs:
@@ -412,11 +559,24 @@ class ThreadedStreamingEngine:
                         break
 
     def stop(self, timeout: float = 5.0) -> None:
+        """Stop consumers and the ticker; ``timeout`` is a *global*
+        deadline shared by all joins.  The seed passed ``timeout`` to each
+        consumer join in turn, so stopping n stuck partitions took up to
+        ``n_partitions × timeout`` — with a shared deadline the worst case
+        is ``timeout`` regardless of partition count (consumers are daemon
+        threads; any still busy past the deadline die with the process)."""
         self._stop.set()
-        for ev in self._wakeups:
+        with self._admin_lock:
+            wakeups = list(self._wakeups)
+            threads = list(self._threads)
+            ticker = self._ticker
+        for ev in wakeups:
             ev.set()
-        for t in self._threads:
-            t.join(timeout=timeout)
+        if ticker is not None:
+            ticker.stop()
+        deadline = time.perf_counter() + timeout
+        for t in threads:
+            t.join(timeout=max(0.0, deadline - time.perf_counter()))
 
     def drain(self, n_expected: int, timeout: float = 60.0) -> None:
         """Block until ``n_expected`` messages are accounted for.
@@ -427,7 +587,6 @@ class ThreadedStreamingEngine:
         estimate over-counted and drain could return with messages still
         pending in the topic.
         """
-        import time
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
             if self.core.processed + self.core.abandoned >= n_expected:

@@ -1,12 +1,19 @@
-"""Suite-wide setup: import paths and the hypothesis fallback shim.
+"""Suite-wide setup: import paths, the hypothesis fallback shim, and the
+wall-clock deadline helper.
 
 Runs before any test module is collected, so the ``from hypothesis import
 ...`` lines in the property-test modules resolve even where hypothesis is
 not installable (the shim in ``_hypothesis_compat`` is registered in
 ``sys.modules`` only when the real package is absent).
+
+``wait_until`` is the suite's condition-polling primitive for wall-clock
+(threaded-engine) tests: every wait is a *condition with a deadline*,
+never a bare ``time.sleep`` — sleep-based waits are exactly the flake
+source the adaptation suite audit removed before the threaded path landed.
 """
 
 import sys
+import time
 from pathlib import Path
 
 _HERE = Path(__file__).resolve().parent
@@ -17,3 +24,16 @@ for p in (str(_HERE), str(_HERE.parent / "src")):
 import _hypothesis_compat  # noqa: E402
 
 _hypothesis_compat.install()
+
+
+def wait_until(condition, timeout: float = 10.0, interval: float = 0.005,
+               message: str = "condition") -> None:
+    """Poll ``condition()`` until it is truthy or ``timeout`` wall seconds
+    elapse (then ``TimeoutError``).  Import from conftest in wall-clock
+    tests instead of sleeping a fixed interval and hoping."""
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if condition():
+            return
+        time.sleep(interval)
+    raise TimeoutError(f"{message} not met within {timeout}s")
