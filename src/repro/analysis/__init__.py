@@ -1,0 +1,26 @@
+"""simlint — determinism & concurrency analysis for the streaming repro.
+
+The repo's invariants (sim-path purity, lock ordering, DES discipline,
+test wall-clock hygiene) as machine-checked rules.  Run with
+``python -m repro.analysis`` or the ``repro-lint`` console script; the
+tier-1 gate is ``tests/test_static_analysis.py``.
+"""
+
+from repro.analysis.cli import analyze_file, iter_source_files, run_analysis
+from repro.analysis.lockwatch import LockWatch, install_from_env
+from repro.analysis.manifest import DEFAULT_MANIFEST, LockSite, Manifest
+from repro.analysis.report import RULES, AnalysisReport, Finding
+
+__all__ = [
+    "AnalysisReport",
+    "DEFAULT_MANIFEST",
+    "Finding",
+    "LockSite",
+    "LockWatch",
+    "Manifest",
+    "RULES",
+    "analyze_file",
+    "install_from_env",
+    "iter_source_files",
+    "run_analysis",
+]

@@ -313,7 +313,7 @@ class OnlineUSLEstimator:
         age = now - np.asarray(self._ts, dtype=np.float64)
         return 0.5 ** (age / max(self.half_life_s, 1e-9))
 
-    def refit(self, now: float) -> USLFit:
+    def refit(self, now: float) -> USLFit:  # simlint: allow[wall-clock] — self-timing of the refit's wall cost (last_refit_wall_s, reported to operators); no sim decision reads it
         """Unconditionally re-fit from the current window (plus prior
         anchors), warm-started from the current fit."""
         t0 = time.perf_counter()

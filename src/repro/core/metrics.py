@@ -43,7 +43,7 @@ def new_run_id(prefix: str = "run") -> str:
     return f"{prefix}-{next(_counter)}-{uuid.uuid4().hex[:8]}"
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class TraceEvent:
     """A single traced event, attributable to a run id.
 

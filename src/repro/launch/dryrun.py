@@ -72,12 +72,12 @@ def _memory_floor(shape, sds) -> float:
 
 
 def compile_cell(cfg, shape, mesh, label: str, policy: str = "default") -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         jitted, sds, _rules = build_cell(cfg, shape, mesh, policy=policy)
         lowered = jitted.lower(*sds)
         compiled = lowered.compile()
-    info = {"label": label, "compile_s": round(time.time() - t0, 1),
+    info = {"label": label, "compile_s": round(time.perf_counter() - t0, 1),
             "memory": _mem_stats(compiled),
             "memory_floor_bytes": _memory_floor(shape, sds)}
     return info, compiled

@@ -75,7 +75,7 @@ def main() -> None:
 
     n_params = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={args.steps}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     losses = []
     for step in range(start, args.steps):
         batch = jax.tree.map(jnp.asarray, data.batch_at(step))
@@ -86,7 +86,7 @@ def main() -> None:
             params, opt_state, metrics = step_fn(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == args.steps - 1:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             tok_s = (step - start + 1) * args.batch * args.seq / max(dt, 1e-9)
             print(f"step {step:5d} loss {losses[-1]:.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "

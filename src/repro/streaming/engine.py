@@ -76,7 +76,7 @@ class Workload:
     name: str = "workload"
 
 
-@dataclass
+@dataclass(slots=True)
 class _PartitionState:
     next_offset: int = 0
     inflight: bool = False

@@ -12,6 +12,7 @@ never a bare ``time.sleep`` — sleep-based waits are exactly the flake
 source the adaptation suite audit removed before the threaded path landed.
 """
 
+import os
 import sys
 import time
 from pathlib import Path
@@ -24,6 +25,21 @@ for p in (str(_HERE), str(_HERE.parent / "src")):
 import _hypothesis_compat  # noqa: E402
 
 _hypothesis_compat.install()
+
+# Opt-in lock-order instrumentation: when SIMLINT_LOCKWATCH_OUT names an
+# output path, every threading.Lock/RLock/Condition created by this test
+# session is tracked and the acquisition graph is dumped there at session
+# end (see repro.analysis.lockwatch).  Installed this early so locks built
+# at module-import time (engine/broker singletons in fixtures) are caught.
+from repro.analysis import lockwatch as _lockwatch  # noqa: E402
+
+_LOCKWATCH = _lockwatch.install_from_env()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _LOCKWATCH is not None:
+        _LOCKWATCH.uninstall()
+        _LOCKWATCH.dump(os.environ[_lockwatch.ENV_OUT])
 
 
 def wait_until(condition, timeout: float = 10.0, interval: float = 0.005,

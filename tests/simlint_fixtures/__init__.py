@@ -1,0 +1,10 @@
+"""Known-bad (and known-clean) snippets for the simlint rule corpus.
+
+Every ``bad_*`` module violates exactly the rules its header names; the
+``clean_*`` modules violate none.  ``tests/test_static_analysis.py`` runs
+the analyzer over each with a fixture manifest and asserts the expected
+rules fire (and nothing fires on the clean ones).  The default manifest
+excludes this whole directory, so the deliberately-broken code never
+reaches the repo gate — and pytest never collects it (no ``test_`` file
+name prefix).
+"""

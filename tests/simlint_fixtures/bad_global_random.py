@@ -1,0 +1,14 @@
+"""Violates: global-random (unseeded global random state in sim path)."""
+
+import random
+
+import numpy as np
+
+
+def jitter(delay):
+    return delay * (1.0 + 0.1 * random.random())    # global-random
+
+
+def reseed_everything():
+    np.random.seed(0)                               # global-random (legacy)
+    return np.random.rand(4)                        # global-random (legacy)

@@ -1,0 +1,5 @@
+"""Violates: salted-hash (builtin hash() routing in sim path)."""
+
+
+def route(key: str, n_partitions: int) -> int:
+    return hash(key) % n_partitions     # salted-hash: PYTHONHASHSEED-dependent

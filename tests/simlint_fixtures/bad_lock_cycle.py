@@ -1,0 +1,35 @@
+"""Runtime fixture: a textbook ABBA lock inversion for the lockwatch shim.
+
+``provoke()`` creates two locks and acquires them in opposite orders on
+two threads, *serialized by events* so the run itself never deadlocks —
+the point is that the acquisition graph ends up with the A→B and B→A
+edges, which ``LockWatch.cycles()`` must report.  Locks must be created
+AFTER the shim is installed, hence construction inside ``provoke()``.
+"""
+
+import threading
+
+
+def provoke() -> None:
+    lock_a = threading.Lock()
+    lock_b = threading.Lock()
+    first_leg_done = threading.Event()
+
+    def ab() -> None:
+        with lock_a:
+            with lock_b:
+                pass
+        first_leg_done.set()
+
+    def ba() -> None:
+        first_leg_done.wait(timeout=5.0)
+        with lock_b:
+            with lock_a:
+                pass
+
+    t1 = threading.Thread(target=ab)
+    t2 = threading.Thread(target=ba)
+    t1.start()
+    t2.start()
+    t1.join(timeout=5.0)
+    t2.join(timeout=5.0)

@@ -1,0 +1,11 @@
+"""Violates: lock-site (lock constructors absent from the manifest)."""
+
+import threading
+
+_registry_lock = threading.Lock()       # lock-site: module level
+
+
+class SneakyQueue:
+    def __init__(self):
+        self._lock = threading.RLock()          # lock-site
+        self._ready = threading.Condition()     # lock-site

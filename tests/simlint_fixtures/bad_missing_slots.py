@@ -1,0 +1,15 @@
+"""Violates: slots (hot-path record class without __slots__)."""
+
+from dataclasses import dataclass
+
+
+@dataclass
+class LagRecord:            # slots: dataclass without slots=True
+    topic: str
+    partition: int
+    lag: int
+
+
+class QueueMessage:         # slots: plain class, no __slots__ declaration
+    def __init__(self, payload):
+        self.payload = payload

@@ -1,0 +1,6 @@
+"""Violates: negative-delay (scheduling DES events before current time)."""
+
+
+def rewind(sim, handler):
+    sim.schedule(-1.0, handler)           # negative-delay
+    sim.schedule_fast(-0.5, handler)      # negative-delay

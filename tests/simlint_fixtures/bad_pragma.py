@@ -1,0 +1,15 @@
+"""Violates: pragma (malformed / unknown-rule / reasonless suppressions)."""
+
+import time
+
+
+def a():
+    return time.time()    # simlint: allow[wall-clock]
+
+
+def b():
+    return time.time()    # simlint: allow[not-a-rule] — misspelled rule id
+
+
+def c():
+    return time.time()    # simlint: allowed[wall-clock] — wrong keyword

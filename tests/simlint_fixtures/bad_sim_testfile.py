@@ -1,0 +1,8 @@
+"""Violates: test-wall (classified as a SIM test file touching the clock)."""
+
+import time
+
+
+def test_latency_under_wall_budget():
+    t0 = time.perf_counter()              # test-wall: sim tests are clock-free
+    assert time.perf_counter() - t0 < 1.0

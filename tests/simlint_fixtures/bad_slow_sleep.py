@@ -1,0 +1,17 @@
+"""Violates: test-slow-wait, test-sleep (classified as a WALL test file)."""
+
+import time
+
+import pytest
+
+
+@pytest.mark.slow
+def test_scale_up_eventually():
+    time.sleep(2.0)                       # test-slow-wait: slow test sleeping
+    t0 = time.perf_counter()              # test-slow-wait: direct wall read
+    assert t0 >= 0
+
+
+def test_settles_after_a_beat():
+    time.sleep(0.2)                       # test-sleep: bare sleep as a wait
+    assert True

@@ -1,0 +1,16 @@
+"""Violates: wall-clock (sim-path code reading/sleeping the wall clock)."""
+
+import time
+from datetime import datetime
+from time import sleep
+
+
+def handle_event(sim, msg):
+    start = time.time()            # wall-clock: read
+    sleep(0.01)                    # wall-clock: from-import wait
+    stamp = datetime.now()         # wall-clock: datetime
+    return start, stamp
+
+
+class BatchTimer:
+    clock = time.perf_counter      # wall-clock: stored reference leaks too

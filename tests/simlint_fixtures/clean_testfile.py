@@ -1,0 +1,17 @@
+"""Clean test module (WALL-classified): waits via wait_until only."""
+
+import pytest
+
+from conftest import wait_until
+
+
+@pytest.mark.slow
+def test_counter_reaches_target():
+    hits = []
+
+    def poke():
+        hits.append(1)
+        return len(hits) >= 3
+
+    wait_until(poke, timeout=1.0, message="three pokes")
+    assert len(hits) >= 3

@@ -301,7 +301,7 @@ def test_threaded_stop_deadline_is_global():
 
     started = []
 
-    def slow(msgs) -> None:
+    def slow(msgs) -> None:  # simlint: allow[test-sleep] — deliberately stuck consumer workload (the thing stop() must abandon), not a synchronization wait
         started.append(msgs[0].partition)
         time.sleep(5.0)
 

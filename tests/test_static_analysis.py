@@ -1,0 +1,294 @@
+"""simlint gate + rule corpus + lock-order shim.
+
+Three layers:
+
+1. **the tier-1 gate** — the analyzer runs over the real ``src/`` and
+   ``tests/`` trees and must report zero findings (within the pragma
+   budget).  A violation introduced anywhere in the repo fails here;
+2. **the rule corpus** — every ``tests/simlint_fixtures/bad_*`` module
+   must trip exactly the rules its header names, and the ``clean_*``
+   modules must trip none (no false positives);
+3. **the runtime shim** — ``LockWatch`` unit tests (ABBA cycle detection,
+   reentrancy, wait-while-holding), plus a slow subprocess run of the
+   engine-conformance suite under the shim asserting the production lock
+   acquisition graph is acyclic with no cross-component waits.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (DEFAULT_MANIFEST, LockSite, LockWatch, Manifest,
+                            analyze_file, run_analysis)
+from repro.analysis.lockwatch import ENV_OUT
+
+REPO_ROOT = str(Path(__file__).resolve().parent.parent)
+FIXTURES = Path(__file__).resolve().parent / "simlint_fixtures"
+
+# Classifies the corpus the way the default manifest classifies the repo:
+# everything sim, two hot modules, three "test files" (two wall, one sim),
+# and an empty lock registry so every constructor is unregistered.
+FIXTURE_MANIFEST = Manifest(
+    sim_modules=("*/simlint_fixtures/*.py",),
+    hot_modules=("*/simlint_fixtures/bad_missing_slots.py",
+                 "*/simlint_fixtures/clean_sim.py"),
+    test_globs=("*/simlint_fixtures/bad_slow_sleep.py",
+                "*/simlint_fixtures/bad_sim_testfile.py",
+                "*/simlint_fixtures/clean_testfile.py"),
+    wall_test_files=("*/simlint_fixtures/bad_slow_sleep.py",
+                     "*/simlint_fixtures/clean_testfile.py"),
+)
+
+
+def lint_fixture(name: str, manifest: Manifest = FIXTURE_MANIFEST):
+    path = FIXTURES / name
+    rel = f"tests/simlint_fixtures/{name}"
+    return analyze_file(str(path), rel, manifest).findings
+
+
+def rules_of(findings) -> set:
+    return {f.rule for f in findings}
+
+
+# -- 1. the repo gate ---------------------------------------------------------
+
+def test_repo_has_zero_findings():
+    """The tier-1 gate: src/ + tests/ are clean under the default manifest."""
+    report = run_analysis(REPO_ROOT)
+    assert report.ok, "\n" + report.render()
+    assert report.files_scanned > 50     # the walk actually found the tree
+    assert report.pragma_count <= DEFAULT_MANIFEST.max_pragmas
+
+
+def test_cli_exits_zero_on_clean_repo():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", REPO_ROOT],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(REPO_ROOT, "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+# -- 2. the rule corpus: every bad fixture fires its rule ---------------------
+
+def test_bad_wallclock_fires():
+    findings = lint_fixture("bad_wallclock.py")
+    assert rules_of(findings) == {"wall-clock"}
+    # read, from-import sleep, datetime.now, and the stored reference
+    assert len(findings) >= 4
+
+
+def test_bad_global_random_fires():
+    findings = lint_fixture("bad_global_random.py")
+    assert rules_of(findings) == {"global-random"}
+    assert len(findings) >= 3        # random.random, np.random.seed/rand
+
+
+def test_bad_hash_routing_fires():
+    findings = lint_fixture("bad_hash_routing.py")
+    assert rules_of(findings) == {"salted-hash"}
+
+
+def test_bad_negative_delay_fires():
+    findings = lint_fixture("bad_negative_delay.py")
+    assert rules_of(findings) == {"negative-delay"}
+    assert len(findings) == 2        # schedule and schedule_fast
+
+
+def test_bad_missing_slots_fires():
+    findings = lint_fixture("bad_missing_slots.py")
+    assert rules_of(findings) == {"slots"}
+    names = {f.message.split("'")[1] for f in findings}
+    assert names == {"LagRecord", "QueueMessage"}
+
+
+def test_bad_lock_site_fires():
+    findings = lint_fixture("bad_lock_site.py")
+    assert rules_of(findings) == {"lock-site"}
+    assert len(findings) == 3        # Lock, RLock, Condition
+
+
+def test_registered_lock_site_is_quiet():
+    manifest = Manifest(
+        sim_modules=FIXTURE_MANIFEST.sim_modules,
+        known_locks=tuple(
+            LockSite("*/simlint_fixtures/bad_lock_site.py", q, k,
+                     "corpus: registered on purpose")
+            for q, k in (("", "Lock"), ("SneakyQueue.__init__", "RLock"),
+                         ("SneakyQueue.__init__", "Condition"))))
+    assert lint_fixture("bad_lock_site.py", manifest) == []
+
+
+def test_bad_slow_sleep_fires():
+    findings = lint_fixture("bad_slow_sleep.py")
+    assert rules_of(findings) == {"test-slow-wait", "test-sleep"}
+    by_rule = {r: [f for f in findings if f.rule == r]
+               for r in rules_of(findings)}
+    assert len(by_rule["test-slow-wait"]) == 2   # sleep + perf_counter
+    assert len(by_rule["test-sleep"]) == 1
+
+
+def test_bad_sim_test_fires():
+    findings = lint_fixture("bad_sim_testfile.py")
+    assert rules_of(findings) == {"test-wall"}
+
+
+def test_bad_pragma_fires():
+    findings = lint_fixture("bad_pragma.py")
+    pragma_findings = [f for f in findings if f.rule == "pragma"]
+    msgs = " | ".join(f.message for f in pragma_findings)
+    assert len(pragma_findings) == 3
+    assert "reason is empty" in msgs
+    assert "unknown rule" in msgs
+    assert "malformed" in msgs
+
+
+def test_valid_pragma_suppresses_scope():
+    src = (
+        "import time\n"
+        "def snap():  # simlint: allow[wall-clock] — corpus: scope pragma\n"
+        "    return time.time()\n")
+    ctx = analyze_file("x.py", "tests/simlint_fixtures/x.py",
+                       FIXTURE_MANIFEST, source=src)
+    assert ctx.findings == []
+    assert any(p.used for p in ctx.pragmas.values())
+
+
+def test_pragma_budget_enforced(tmp_path):
+    src_dir = tmp_path / "src"
+    src_dir.mkdir()
+    (src_dir / "mod.py").write_text(
+        "import time\n"
+        "def f():  # simlint: allow[wall-clock] — budget corpus\n"
+        "    return time.time()\n")
+    tight = Manifest(sim_modules=("*mod.py",), max_pragmas=0)
+    report = run_analysis(str(tmp_path), tight)
+    assert [f.rule for f in report.findings] == ["pragma"]
+    assert "budget exceeded" in report.findings[0].message
+
+
+# -- 3. no false positives ----------------------------------------------------
+
+def test_clean_sim_fixture_is_quiet():
+    assert lint_fixture("clean_sim.py") == []
+
+
+def test_clean_test_fixture_is_quiet():
+    assert lint_fixture("clean_testfile.py") == []
+
+
+def test_fixtures_are_excluded_from_the_repo_gate():
+    assert DEFAULT_MANIFEST.is_excluded(
+        "tests/simlint_fixtures/bad_wallclock.py")
+
+
+# -- 4. the lock-order shim ---------------------------------------------------
+
+def test_lockwatch_detects_abba_cycle():
+    import simlint_fixtures.bad_lock_cycle as fixture
+
+    watch = LockWatch().install()
+    try:
+        fixture.provoke()
+    finally:
+        watch.uninstall()
+    cycles = watch.cycles()
+    assert cycles, "ABBA inversion must produce a cycle"
+    assert all("bad_lock_cycle.py" in site
+               for cyc in cycles for site in cyc)
+
+
+def test_lockwatch_ordered_nesting_is_acyclic():
+    watch = LockWatch().install()
+    try:
+        outer = threading.Lock()
+        inner = threading.Lock()
+        for _ in range(3):
+            with outer:
+                with inner:
+                    pass
+    finally:
+        watch.uninstall()
+    assert watch.cycles() == []
+    # 3 rounds x 2 acquires — a hard count so accounting regressions
+    # surface loudly
+    assert watch.acquisitions == 6
+    assert watch.edges[next(iter(watch.edges))]   # outer->inner edge exists
+
+
+def test_lockwatch_reentrant_rlock_no_self_edge():
+    watch = LockWatch().install()
+    try:
+        lk = threading.RLock()
+        with lk:
+            with lk:
+                pass
+    finally:
+        watch.uninstall()
+    assert watch.cycles() == []
+    assert watch.edges == {}
+
+
+def test_lockwatch_records_wait_while_holding():
+    watch = LockWatch().install()
+    try:
+        held = threading.Lock()
+        cond = threading.Condition()
+        with held:
+            with cond:
+                cond.wait(timeout=0.01)
+    finally:
+        watch.uninstall()
+    assert watch.waits, "Condition.wait while holding a lock must register"
+    assert any(w["held"] for w in watch.waits)
+
+
+def test_lockwatch_event_roundtrip_under_shim():
+    """threading.Event is Condition-over-Lock internally: the proxy's
+    plain-lock fallback protocol must keep it fully functional."""
+    watch = LockWatch().install()
+    try:
+        ev = threading.Event()
+        hits = []
+
+        def setter():
+            hits.append(1)
+            ev.set()
+
+        t = threading.Thread(target=setter)
+        t.start()
+        assert ev.wait(timeout=5.0)
+        t.join(timeout=5.0)
+    finally:
+        watch.uninstall()
+    assert hits == [1]
+    assert watch.cycles() == []
+
+
+@pytest.mark.slow
+def test_conformance_suite_lock_graph_is_acyclic(tmp_path):
+    """Run the full cross-engine conformance suite in a subprocess with the
+    lockwatch shim installed (via the conftest env hook) and assert the
+    production acquisition graph has no cycles and no cross-component
+    waits-while-holding — the machine-checked form of the ordering notes
+    in the manifest's known_locks."""
+    out = tmp_path / "lockgraph.json"
+    env = {**os.environ, ENV_OUT: str(out),
+           "PYTHONPATH": os.path.join(REPO_ROOT, "src")}
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         os.path.join(REPO_ROOT, "tests", "test_engine_conformance.py")],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env,
+        timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    assert data["acquisitions"] > 0, "shim saw no lock traffic at all"
+    assert data["cycles"] == [], json.dumps(data["cycles"], indent=1)
+    assert data["cross_component_waits"] == [], \
+        json.dumps(data["cross_component_waits"], indent=1)
