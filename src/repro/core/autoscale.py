@@ -502,7 +502,8 @@ class ControlLoop:
     def __init__(self, engine, broker, topic: str, pilot, policy, *,
                  metrics, run_id: str,
                  interval_s: float = 2.0, slo_lag: int = 32,
-                 migration_s_per_delta: float = 0.0) -> None:
+                 migration_s_per_delta: float = 0.0,
+                 fault_signal: Callable[[], bool] | None = None) -> None:
         self.engine = engine          # EngineControlSurface
         self.broker = broker
         self.topic = topic
@@ -513,11 +514,21 @@ class ControlLoop:
         self.interval_s = interval_s
         self.slo_lag = slo_lag
         self.migration_s_per_delta = migration_s_per_delta
+        # latched "a fault fired / is in force since the last probe" read
+        # (FaultInjector.window_dirty): such windows are excluded from the
+        # online estimator the same way in-flight grants are — a crash or
+        # stall mid-window makes the observed rate measure the fault, not
+        # the capacity at N.  (Preemption is additionally covered by the
+        # granted==target gate, because effective_allocation dips.)
+        self.fault_signal = fault_signal
         self.allocation = pilot.backend.allocation(pilot)
         self.ticks = 0
         self.slo_violations = 0
         self.scale_events = 0
         self.refit_events = 0
+        self.fault_windows = 0            # ticks whose window saw a fault
+        self.tick_errors = 0              # surfaced ticker-callback failures
+        self._ticker_error_seen = False
         self.cost_integral = 0.0          # ∫ allocation dt
         self._stopped = False
         self._last_t = engine.now()
@@ -558,6 +569,10 @@ class ControlLoop:
         completed = self.metrics.kind_count(self.run_id, "complete")
         dt = max(now - self._last_t, 1e-9)
         effective = backend.effective_allocation(self.pilot)
+        faulty = bool(self.fault_signal()) if self.fault_signal is not None \
+            else False
+        if faulty:
+            self.fault_windows += 1
         obs = ControlObservation(
             t=now,
             lag=max(0, produced - completed),
@@ -572,7 +587,8 @@ class ControlLoop:
             # wait on the batch queue — resharded partitions pinned to
             # still-queued workers stall, so the window's rate reflects a
             # crippled topology, not the capacity of the live worker count
-            window_stable=(effective == self._eff_after_act
+            window_stable=(not faulty
+                           and effective == self._eff_after_act
                            and effective == self.allocation),
         )
         self._last_produced = produced
@@ -590,12 +606,34 @@ class ControlLoop:
                             n_obs=len(est), wall_s=est.last_refit_wall_s)
 
     def _tick(self) -> None:
-        with self._tick_lock:
-            self._tick_locked()
+        try:
+            with self._tick_lock:
+                self._tick_locked()
+        finally:
+            # Re-arm OUTSIDE the tick body.  The seed re-armed as the last
+            # line of _tick_locked, so a single raising policy/backend call
+            # silently killed the loop: the wall ticker stored the error
+            # and kept ticking, but nothing ever re-scheduled this tick —
+            # in-flight call_later entries drained and the controller went
+            # quiet mid-run.  Re-arming in a finally keeps the loop alive
+            # through one-off failures; the error itself is still surfaced
+            # (ticker_error → tick_errors on the next tick, and
+            # run_adaptation raises on it after the run).
+            if not self._stopped:
+                self.engine.call_later(self.interval_s, self._tick)
 
     def _tick_locked(self) -> None:
         if self._stopped:
             return
+        err = getattr(self.engine, "ticker_error", None)
+        if err is not None and not self._ticker_error_seen:
+            # a ticker callback (this tick or any other call_later client)
+            # failed since the last probe: count it and trace it so a
+            # crashed-then-recovered controller is visible in the report
+            self._ticker_error_seen = True
+            self.tick_errors += 1
+            self.metrics.record(self.run_id, "autoscale", "tick_error",
+                                self.engine.now(), error=repr(err))
         obs = self.observe()
         self._account(obs.t)
         self.ticks += 1
@@ -617,4 +655,3 @@ class ControlLoop:
                 self.broker.repartition(self.topic, granted)
                 self.engine.repartition(self.migration_s_per_delta * delta)
         self._eff_after_act = self.pilot.backend.effective_allocation(self.pilot)
-        self.engine.call_later(self.interval_s, self._tick)

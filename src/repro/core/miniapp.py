@@ -55,6 +55,7 @@ from repro.pilot.api import (PilotComputeService, PilotDescription, State,
 from repro.streaming.broker import Broker
 from repro.streaming.engine import (SimStreamingEngine,
                                     ThreadedStreamingEngine, Workload)
+from repro.streaming.faults import FaultInjector, FaultPlan
 from repro.streaming.producer import (AIMD, PartitionIngest, RateProgram,
                                       SharedFsIngest, SyntheticProducer,
                                       rate_program_from_spec)
@@ -250,6 +251,10 @@ class AdaptationExperiment(_PlatformCell):
     batch_max: int = 1
     seed: int = 0
     backend_attrs: dict = field(default_factory=dict)
+    faults: dict | None = None         # FaultPlan spec (streaming.faults) —
+                                       # failure semantics as a scenario axis
+    max_retries: int = 2               # per-batch retry budget before poison
+    retry_backoff_s: float = 0.0       # exponential-backoff base (0 = immediate)
     engine: str = "sim"                # sim | threaded (wall clock)
     drift_t_s: float | None = None     # per-message cost shifts at this time
     drift_factor: float = 1.0          # ... by this multiplier
@@ -287,6 +292,12 @@ class AdaptationResult:
     wall_virtual_s: float = 0.0
     des_events: int = 0
     refits: int = 0                    # online USL re-fits performed
+    abandoned: int = 0                 # batches poisoned past the retry budget
+    dup_delivered: int = 0             # redelivered messages settled idempotently
+    faults_injected: int = 0           # FaultInjector events fired
+    preemptions: int = 0               # capacity-revocation events
+    fault_windows: int = 0             # control windows dirtied by faults
+    lost: int = 0                      # appended - (processed+abandoned+dups)
 
     def record(self) -> dict:
         e = self.experiment
@@ -301,7 +312,11 @@ class AdaptationResult:
                     throughput=self.throughput,
                     latency_px_p95=self.latency_px.get("p95", float("nan")),
                     final_allocation=self.final_allocation,
-                    drained=self.drained, drain_s=self.drain_s)
+                    drained=self.drained, drain_s=self.drain_s,
+                    abandoned=self.abandoned, dup_delivered=self.dup_delivered,
+                    faults_injected=self.faults_injected,
+                    preemptions=self.preemptions,
+                    fault_windows=self.fault_windows, lost=self.lost)
 
 
 def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
@@ -335,6 +350,35 @@ def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
     if exp.scaling_policy == "static":
         return StaticPolicy(initial)
     raise ValueError(f"unknown scaling_policy {exp.scaling_policy!r}")
+
+
+def _build_injector(exp: AdaptationExperiment, engine, broker, topic, pilot,
+                    metrics: MetricRegistry, run_id: str):
+    """Materialize the cell's fault axis (``exp.faults`` spec → seeded
+    ``FaultInjector``), or ``None`` for a fault-free run."""
+    if not exp.faults:
+        return None
+    plan = FaultPlan.from_spec(exp.faults, default_seed=exp.seed,
+                               default_horizon_s=exp.horizon_s)
+    return FaultInjector(plan, engine, broker, topic, pilot,
+                         metrics=metrics, run_id=run_id)
+
+
+def _fault_fields(engine, broker, topic, injector, loop) -> dict:
+    """Failure-semantics columns of the report card.  ``lost`` is the
+    at-least-once ledger residue: appends not settled as exactly-once
+    processing, poison abandonment or idempotent duplicate absorption.
+    Zero means nothing was lost; negative would mean double-counting."""
+    core = engine.core
+    settled = core.processed + core.abandoned + core.dup_delivered
+    return dict(
+        abandoned=core.abandoned,
+        dup_delivered=core.dup_delivered,
+        faults_injected=injector.injected if injector is not None else 0,
+        preemptions=injector.preemptions if injector is not None else 0,
+        fault_windows=loop.fault_windows,
+        lost=broker.appended_total(topic) - settled,
+    )
 
 
 def run_adaptation(exp: AdaptationExperiment,
@@ -429,16 +473,23 @@ def run_adaptation(exp: AdaptationExperiment,
         horizon_s=exp.horizon_s, ingest=ingest)
     engine = SimStreamingEngine(
         sim, broker, topic, pilot, workload, metrics, run_id,
-        batch_max=exp.batch_max, is_input_complete=lambda: producer.done)
+        batch_max=exp.batch_max, max_retries=exp.max_retries,
+        retry_backoff_s=exp.retry_backoff_s,
+        is_input_complete=lambda: producer.done)
+    injector = _build_injector(exp, engine, broker, topic, pilot,
+                               metrics, run_id)
     loop = ControlLoop(
         engine, broker, topic, pilot,
         _make_scaling_policy(exp, initial),
         metrics=metrics, run_id=run_id, interval_s=exp.control_interval_s,
         slo_lag=exp.slo_lag,
-        migration_s_per_delta=exp.migration_s_per_delta)
+        migration_s_per_delta=exp.migration_s_per_delta,
+        fault_signal=injector.window_dirty if injector is not None else None)
 
     producer.start()
     engine.start()
+    if injector is not None:
+        injector.start()
     loop.start()
     max_virtual = exp.horizon_s * 6.0 + 600.0
     sim.run_until(t=sim.now + max_virtual, predicate=engine.is_finished)
@@ -466,6 +517,7 @@ def run_adaptation(exp: AdaptationExperiment,
         wall_virtual_s=sim.now,
         des_events=sim.events_processed,
         refits=loop.refit_events,
+        **_fault_fields(engine, broker, topic, injector, loop),
     )
     pcs.close()
     return result
@@ -582,19 +634,25 @@ def _run_adaptation_threaded(exp: AdaptationExperiment,
     workload = Workload(fn=process, name="sleep-adapt")
     engine = ThreadedStreamingEngine(
         broker, topic, pilot, workload, metrics, run_id,
-        batch_max=exp.batch_max)
+        batch_max=exp.batch_max, max_retries=exp.max_retries,
+        retry_backoff_s=exp.retry_backoff_s, seed=exp.seed)
+    injector = _build_injector(exp, engine, broker, topic, pilot,
+                               metrics, run_id)
     loop = ControlLoop(
         engine, broker, topic, pilot,
         _make_scaling_policy(exp, initial),
         metrics=metrics, run_id=run_id, interval_s=exp.control_interval_s,
         slo_lag=exp.slo_lag,
-        migration_s_per_delta=exp.migration_s_per_delta)
+        migration_s_per_delta=exp.migration_s_per_delta,
+        fault_signal=injector.window_dirty if injector is not None else None)
     producer = _WallClockProducer(
         broker, topic, rate_program_from_spec(exp.rate), exp.horizon_s,
         run_id, metrics, t0, msg_bytes=exp.points * POINT_BYTES)
 
     engine.start()
     producer.start()
+    if injector is not None:
+        injector.start()
     loop.start()
     producer.join(timeout=exp.horizon_s + 30.0)
     drained = True
@@ -638,6 +696,7 @@ def _run_adaptation_threaded(exp: AdaptationExperiment,
         wall_virtual_s=end_rel,
         des_events=0,
         refits=loop.refit_events,
+        **_fault_fields(engine, broker, topic, injector, loop),
     )
     pcs.close()
     return result

@@ -90,7 +90,7 @@ __all__ = ["ExperimentDesign", "AdaptationDesign", "ScenarioModel",
            "StreamInsight", "ResultCache", "run_cells", "estimated_cost",
            "PARALLEL_COST_THRESHOLD"]
 
-_CACHE_VERSION = 3     # v3: online-refit/threaded-engine adaptation fields
+_CACHE_VERSION = 4     # v4: fault-injection / at-least-once delivery fields
 
 
 @dataclass
@@ -167,6 +167,9 @@ class AdaptationDesign:
     refit_window: int = 128
     refit_half_life_s: float = 45.0
     threaded_service_s: float | None = None
+    faults: dict | None = None      # FaultPlan spec — failure-semantics axis
+    max_retries: int = 2            # retry budget before poisoning a batch
+    retry_backoff_s: float = 0.0    # exponential-backoff base (0 = immediate)
 
     def experiments(self, usl_params: dict | None = None) -> list[AdaptationExperiment]:
         """``usl_params``: machine → (sigma, kappa, gamma) for the
@@ -201,7 +204,10 @@ class AdaptationDesign:
                 refit_interval_s=self.refit_interval_s,
                 refit_window=self.refit_window,
                 refit_half_life_s=self.refit_half_life_s,
-                threaded_service_s=self.threaded_service_s))
+                threaded_service_s=self.threaded_service_s,
+                faults=dict(self.faults) if self.faults else None,
+                max_retries=self.max_retries,
+                retry_backoff_s=self.retry_backoff_s))
         return out
 
 
@@ -215,7 +221,9 @@ _ADAPT_RESULT_FIELDS = ("run_id", "slo_violations", "ticks", "cost_integral",
                         "scale_events", "produced", "processed", "throughput",
                         "latency_px", "alloc_trace", "lag_trace",
                         "final_allocation", "drained", "drain_s",
-                        "wall_virtual_s", "des_events", "refits")
+                        "wall_virtual_s", "des_events", "refits",
+                        "abandoned", "dup_delivered", "faults_injected",
+                        "preemptions", "fault_windows", "lost")
 
 # cell-type registry: run_cells / ResultCache dispatch on the experiment
 # dataclass, so characterization and adaptation cells share the runner,

@@ -292,6 +292,27 @@ class Backend:
         to this, not the target.  Defaults to ``allocation``."""
         return self.allocation(pilot)
 
+    # -- fault surface (driven by streaming.faults.FaultInjector) -------------
+    def inject_crash(self, pilot: Pilot, count: int = 1) -> int:
+        """Crash up to ``count`` execution units (containers/workers):
+        in-flight work fails with ``ConnectionError`` (the engines' retry
+        path re-dispatches it) and the platform replaces the capacity per
+        its own semantics — serverless restarts a fresh cold container
+        immediately, HPC workers restart through the batch queue.  Returns
+        the number of units actually crashed; backends without fault
+        support inject nothing."""
+        return 0
+
+    def preempt(self, pilot: Pilot, count: int = 1) -> int:
+        """Spot-style preemption: revoke up to ``count`` units of *granted*
+        capacity through the platform — serverless kills live containers,
+        HPC evicts granted workers back into the queue, wall-clock
+        backends shrink admitted worker slots.  ``effective_allocation``
+        dips while the revocation is in force; capacity returns per
+        backend semantics (restore delay / re-queued grant).  Returns the
+        number of units actually revoked."""
+        return 0
+
     def cancel_pilot(self, pilot: Pilot) -> None:
         pass
 

@@ -30,8 +30,11 @@ and the streaming engine re-dispatches.
 
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from repro.pilot.api import Backend, ComputeUnit, Pilot, State, TaskProfile, register_backend
 from repro.sim.des import SharedResource, SimLock, Simulator
@@ -50,7 +53,16 @@ DEFAULTS = dict(
     jitter_cv=0.08,         # shared-environment noise
     net_bw=1.1e9,           # node NIC, bytes/s (per flow, before FS sharing)
     grant_delay_s=10.0,     # scheduler queue wait before a grown worker runs
+    # Empirical batch-queue wait distribution (log-normal).  When p50/p95
+    # are set (p95 > p50 > 0) every grant — elastic growth, crash restart,
+    # preemption re-queue — waits out a seeded log-normal sample shaped by
+    # those quantiles; unset, the wait is degenerate at grant_delay_s (the
+    # flat calibrated delay the fig8 tuning was built on).
+    queue_wait_p50_s=None,
+    queue_wait_p95_s=None,
 )
+
+_Z95 = 1.6448536269514722   # standard-normal 95th percentile
 
 
 @dataclass
@@ -68,6 +80,7 @@ class HpcSimBackend(Backend):
 
     def __init__(self, sim: Simulator | None = None, seed: int = 0, **_kw) -> None:
         self.sim = sim or Simulator(seed=seed)
+        self._seed = seed
         self._pilots: dict[int, dict] = {}
 
     def start_pilot(self, pilot: Pilot) -> None:
@@ -89,8 +102,32 @@ class HpcSimBackend(Backend):
             "rr": 0,
             "target": max(1, n_workers),
             "mapping": None,     # cached non-retired worker list
+            # dedicated queue-wait stream: decoupled from the service-time
+            # jitter stream so enabling the empirical wait distribution
+            # cannot perturb unrelated draws (per-pilot, seeded)
+            "queue_rng": np.random.default_rng([self._seed, pilot.uid]),
         }
         pilot.state = State.RUNNING
+
+    def _queue_wait(self, st: dict) -> float:
+        """One batch-queue wait sample, seconds.
+
+        Default: degenerate at ``grant_delay_s`` — the flat calibrated
+        wait.  Setting ``queue_wait_p50_s``/``queue_wait_p95_s`` switches
+        to the seeded log-normal those quantiles imply (mu = ln p50,
+        sigma = ln(p95/p50)/z95) — the empirical heavy-tailed batch-queue
+        shape, closing the ROADMAP's flat-grant-delay calibration item.
+        """
+        cfg = st["cfg"]
+        p50 = cfg.get("queue_wait_p50_s")
+        if p50 is None:
+            p50 = cfg["grant_delay_s"]
+        p95 = cfg.get("queue_wait_p95_s")
+        if p95 is None or p50 <= 0.0 or p95 <= p50:
+            return float(p50)
+        mu = math.log(p50)
+        sigma = math.log(p95 / p50) / _Z95
+        return float(st["queue_rng"].lognormal(mu, sigma))
 
     # -- elasticity ----------------------------------------------------------
     def _mapping(self, st: dict) -> list[_Worker]:
@@ -124,7 +161,7 @@ class HpcSimBackend(Backend):
                     w.pending = False
                     self._pump_worker(pilot, w)
 
-                self.sim.schedule_fast(st["cfg"]["grant_delay_s"], grant)
+                self.sim.schedule_fast(self._queue_wait(st), grant)
         elif n < len(active):
             victims = active[n:]
             for w in victims:
@@ -187,6 +224,61 @@ class HpcSimBackend(Backend):
                 cu._set_failed(self.sim.now, ConnectionError(f"worker {wid} died (queued)"))
         w.queue.clear()
         return orphans
+
+    def _evict(self, pilot: Pilot, st: dict, w: _Worker, why: str) -> None:
+        """Evict one granted worker back into the batch queue: the running
+        CU fails with ``ConnectionError`` (the engine's unpinned retry path
+        re-dispatches), queued work is reassigned under the current
+        mapping, and the worker re-grants after a fresh queue-wait
+        sample."""
+        w.pending = True
+        for cu in pilot.compute_units:
+            if not cu.state.is_final \
+                    and cu.attrs.get("worker") == w.wid \
+                    and cu.state == State.RUNNING:
+                cu._set_failed(self.sim.now,
+                               ConnectionError(f"worker {w.wid} {why}"))
+        orphans = [cu for cu in w.queue if not cu.state.is_final]
+        w.queue.clear()
+
+        def regrant(w: _Worker = w) -> None:
+            w.pending = False
+            self._pump_worker(pilot, w)
+
+        self.sim.schedule_fast(self._queue_wait(st), regrant)
+        for cu in orphans:
+            self._assign(pilot, cu)
+
+    def inject_crash(self, pilot: Pilot, count: int = 1) -> int:
+        """Node crash with restart-through-the-queue semantics (busy
+        workers first): the running CU fails, queued work is reassigned,
+        and the node re-enters the batch queue — re-granted only after a
+        fresh queue-wait sample, unlike serverless's instant sandbox
+        restart."""
+        st = self._pilots[pilot.uid]
+        granted = [w for w in st["workers"]
+                   if w.alive and not w.retired and not w.pending]
+        busy = [w for w in granted if w.busy]
+        idle = [w for w in granted if not w.busy]
+        victims = (busy + idle)[:count]
+        for w in victims:
+            self._evict(pilot, st, w, "crashed")
+        return len(victims)
+
+    def preempt(self, pilot: Pilot, count: int = 1) -> int:
+        """Spot-style eviction of granted workers back into the batch
+        queue, most recently granted first: running work fails, queued
+        work is reassigned, and the evicted workers wait out a fresh
+        queue-wait sample — during which ``effective_allocation`` dips
+        below target (the signal the control loop's granted==target
+        gating keys on)."""
+        st = self._pilots[pilot.uid]
+        granted = [w for w in st["workers"]
+                   if w.alive and not w.retired and not w.pending]
+        victims = granted[-count:] if count > 0 else []
+        for w in victims:
+            self._evict(pilot, st, w, "preempted")
+        return len(victims)
 
     # -- scheduling: serial dispatcher --------------------------------------
     def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:

@@ -37,7 +37,9 @@ class LocalBackend(Backend):
         workers = max(1, workers)
         self._pools[pilot.uid] = ThreadPoolExecutor(max_workers=workers)
         self._caps[pilot.uid] = {"capacity": workers, "running": 0,
-                                 "ceiling": workers}
+                                 "ceiling": workers,
+                                 "revoked": 0,       # preempted worker slots
+                                 "crash_next": 0}    # injected crash budget
         pilot.state = State.RUNNING
 
     # -- elasticity ----------------------------------------------------------
@@ -53,6 +55,51 @@ class LocalBackend(Backend):
         with self._cv:
             return self._caps[pilot.uid]["capacity"]
 
+    def effective_allocation(self, pilot: Pilot) -> int:
+        """Admitted slots actually available: capacity minus slots revoked
+        by an in-force preemption (never below 1, so the pipeline can
+        still drain)."""
+        with self._cv:
+            st = self._caps[pilot.uid]
+            return max(1, st["capacity"] - st["revoked"])
+
+    # -- fault surface ---------------------------------------------------------
+    def inject_crash(self, pilot: Pilot, count: int = 1) -> int:
+        """Fail the next ``count`` task executions with ``ConnectionError``
+        — the wall-clock analogue of a worker crash killing the in-flight
+        batch (the consumer's retry path re-submits)."""
+        with self._cv:
+            self._caps[pilot.uid]["crash_next"] += int(count)
+        return int(count)
+
+    def preempt(self, pilot: Pilot, count: int = 1) -> int:
+        """Spot-style revocation of admitted worker slots: capacity drops
+        by up to ``count`` (always keeping one slot) and returns after
+        ``preempt_restore_s`` (pilot attrs, default 2 s) on a timer
+        thread.  In-flight tasks finish — the wall-clock pool cannot kill
+        a running thread, so revocation bites at the admission gate, which
+        is the same queueing semantics the sim backends express."""
+        with self._cv:
+            st = self._caps[pilot.uid]
+            take = max(0, min(int(count),
+                              st["capacity"] - st["revoked"] - 1))
+            st["revoked"] += take
+            self._cv.notify_all()
+        if take:
+            restore_s = float(pilot.desc.attrs.get("preempt_restore_s", 2.0))
+            t = threading.Timer(restore_s, self._restore, args=(pilot, take))
+            t.daemon = True
+            t.start()
+        return take
+
+    def _restore(self, pilot: Pilot, n: int) -> None:
+        with self._cv:
+            st = self._caps.get(pilot.uid)
+            if st is None:
+                return
+            st["revoked"] = max(0, st["revoked"] - n)
+            self._cv.notify_all()
+
     def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
         cu.submit_ts = time.perf_counter()
         cu.state = State.PENDING
@@ -61,14 +108,20 @@ class LocalBackend(Backend):
 
         def run() -> None:
             with self._cv:
-                while st["running"] >= st["capacity"] and not cu.state.is_final:
+                while st["running"] >= max(1, st["capacity"] - st["revoked"]) \
+                        and not cu.state.is_final:
                     self._cv.wait(0.1)
                 if cu.state.is_final:       # canceled while queued
                     return
                 st["running"] += 1
+                crash = st["crash_next"] > 0
+                if crash:
+                    st["crash_next"] -= 1
             try:
                 cu._set_running(time.perf_counter())
                 try:
+                    if crash:
+                        raise ConnectionError("worker crashed (injected)")
                     out = cu.desc.func(*cu.desc.args, **cu.desc.kwargs) if cu.desc.func else None
                     cu._set_done(time.perf_counter(), out)
                 except BaseException as exc:  # noqa: BLE001 — report task failure

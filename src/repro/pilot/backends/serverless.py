@@ -51,6 +51,7 @@ DEFAULTS = dict(
     s3_latency=0.018,      # per S3 request, s
     jitter_cv_ref=0.03,    # cv at memory_cap; cv = ref * cap/memory
     invoke_overhead_s=0.002,
+    preempt_restore_s=30.0,  # spot capacity returns after this delay
 )
 
 
@@ -59,6 +60,8 @@ class _Container:
     cid: int
     warm: bool = False
     busy: bool = False
+    dead: bool = False                  # crashed/preempted: finish is void
+    cu: ComputeUnit | None = None       # in-flight invocation, if busy
 
 
 class ServerlessSimBackend(Backend):
@@ -135,6 +138,75 @@ class ServerlessSimBackend(Backend):
             if not cu.state.is_final:
                 cu._set_canceled(self.sim.now)
 
+    # -- fault surface ---------------------------------------------------------
+    def _kill(self, st: dict, container: _Container, why: str) -> None:
+        """Remove one container; its in-flight invocation (if any) fails
+        with ``ConnectionError`` so the engine's unpinned retry path takes
+        over.  The pending ``finish`` event is voided by the dead flag."""
+        container.dead = True
+        st["containers"].remove(container)
+        if container in st["free"]:
+            st["free"].remove(container)
+        cu = container.cu
+        container.cu = None
+        if cu is not None and not cu.state.is_final:
+            cu._set_failed(self.sim.now,
+                           ConnectionError(f"container {container.cid} {why}"))
+
+    def inject_crash(self, pilot: Pilot, count: int = 1) -> int:
+        """Crash up to ``count`` containers (busy first — a crash that hits
+        nothing is a non-event): the invocation fails and Lambda restarts
+        the sandbox immediately, so a fresh *cold* replacement joins the
+        pool at once — the crash costs a retry plus a cold start, not
+        capacity."""
+        st = self._pilots[pilot.uid]
+        victims = [c for c in st["containers"] if c.busy][:count]
+        if len(victims) < count:
+            victims += [c for c in st["containers"]
+                        if not c.busy][:count - len(victims)]
+        for c in victims:
+            self._kill(st, c, "crashed")
+            fresh = _Container(st["next_cid"])
+            st["next_cid"] += 1
+            st["containers"].append(fresh)
+            st["free"].append(fresh)
+        if victims:
+            self._dispatch(pilot)
+        return len(victims)
+
+    def preempt(self, pilot: Pilot, count: int = 1) -> int:
+        """Spot reclamation: revoke up to ``count`` live containers (newest
+        idle first, then busy ones — in-flight work fails like a crash).
+        Unlike a crash the capacity is *gone*: ``effective_allocation``
+        dips until fresh cold containers restore the pool toward target
+        after ``preempt_restore_s``."""
+        st = self._pilots[pilot.uid]
+        containers = st["containers"]
+        idle = [c for c in reversed(containers) if not c.busy]
+        busy = [c for c in reversed(containers) if c.busy]
+        victims = (idle + busy)[:count]
+        for c in victims:
+            self._kill(st, c, "preempted")
+        n = len(victims)
+        if n:
+            self.sim.schedule_fast(float(st["cfg"]["preempt_restore_s"]),
+                                   lambda: self._restore_preempted(pilot, n))
+        return n
+
+    def _restore_preempted(self, pilot: Pilot, n: int) -> None:
+        st = self._pilots.get(pilot.uid)
+        if st is None:
+            return
+        restored = 0
+        while restored < n and len(st["containers"]) < st["target"]:
+            c = _Container(st["next_cid"])
+            st["next_cid"] += 1
+            st["containers"].append(c)
+            st["free"].append(c)
+            restored += 1
+        if restored:
+            self._dispatch(pilot)
+
     # -- execution -------------------------------------------------------------
     def submit(self, pilot: Pilot, cu: ComputeUnit) -> None:
         cu.submit_ts = self.sim.now
@@ -194,6 +266,7 @@ class ServerlessSimBackend(Backend):
                 f"{pilot.desc.memory_mb} MB"))
             return
         container.busy = True
+        container.cu = cu
         cold = not container.warm
         container.warm = True
         cu._set_running(self.sim.now)
@@ -201,7 +274,10 @@ class ServerlessSimBackend(Backend):
         dt = self.service_time(cfg, pilot.desc.memory_mb, profile, cold)
 
         def finish() -> None:
+            if container.dead:
+                return     # crashed/preempted mid-flight: already failed
             container.busy = False
+            container.cu = None
             if len(st["containers"]) > st["target"]:
                 # a scale-down landed while this container was busy: retire
                 # it now instead of returning it to the pool

@@ -152,10 +152,21 @@ class Broker:
     def append(self, topic: str, value: Any, *, ts: float, key: Any = None,
                partition: int | None = None, run_id: str | None = None,
                msg_id: str | None = None, size_bytes: int = 0) -> Message:
+        """Append one message; returns the minted ``Message``.
+
+        Every message carries a *stable id*: callers that retry/redeliver
+        pass the original ``msg_id`` explicitly (a redelivery lands at a
+        NEW offset but keeps its id); first-time appends that pass ``None``
+        get the deterministic ``topic/partition/offset`` of their first
+        landing.  The engines' idempotent accounting keys on this id, so
+        at-least-once delivery still yields processed-exactly-once counts.
+        """
         with self._lock:
             if partition is None:
                 partition = self.partition_for(topic, key)
             part = self._topics[topic][partition]
+            if msg_id is None:
+                msg_id = f"{topic}/{partition}/{len(part.log)}"
             msg = Message(topic, partition, len(part.log), ts, key, value,
                           run_id, msg_id, size_bytes)
             part.log.append(msg)

@@ -20,14 +20,25 @@ Fault tolerance (framework-level, beyond the paper's prose but required for
 scale):
 
 * **retry / re-dispatch** — a failed CU is re-submitted up to
-  ``max_retries`` times; after a worker-loss (``ConnectionError``) the retry
-  drops its partition pinning so any surviving worker can take it.
+  ``max_retries`` times with exponential backoff + jitter
+  (``retry_backoff_s``, default 0 = immediate); after a worker-loss
+  (``ConnectionError``) the retry drops its partition pinning so any
+  surviving worker can take it.
 * **straggler mitigation** — if a CU exceeds ``straggler_factor ×`` the
   median observed runtime (with a floor), a duplicate CU is dispatched;
-  the first completion wins and commits, the loser is ignored.
-* **at-least-once** — offsets only advance on completion, so every message
-  is processed at least once; duplicate completions are idempotent on the
-  commit path.
+  the first completion wins and commits, the loser is ignored (both
+  engines — the threaded engine dispatches the speculative copy from its
+  consumer thread and the first finisher acks).
+* **at-least-once + idempotent accounting** — offsets only advance on
+  completion, so every message is processed at least once; duplicate
+  completions are idempotent on the commit path, and *redelivered*
+  messages (same stable ``msg_id``, new offset — see ``Broker.append``)
+  commit their offset but settle as ``dup_delivered``, keeping
+  ``processed`` an exactly-once count.
+* **fault injection** — ``streaming.faults`` drives crashes/preemptions
+  through the backends, ``stall_partition`` freezes a partition's dispatch
+  for a duration, and duplicate redelivery exercises the id-dedup path;
+  identical semantics on both engines are pinned by the conformance suite.
 
 Two drivers share this logic:
 ``SimStreamingEngine`` (virtual clock, push wakeups on the broker's append
@@ -53,6 +64,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
+
+import numpy as np
 
 from repro.core.metrics import MetricRegistry
 from repro.pilot.api import ComputeUnitDescription, Pilot, State, TaskProfile
@@ -81,6 +94,7 @@ class _PartitionState:
     next_offset: int = 0
     inflight: bool = False
     retries: int = 0
+    stalled_until: float = 0.0     # fault-injected dispatch freeze
 
     def is_done(self, key: tuple) -> bool:
         """True if the (offset_lo, offset_hi) batch already committed.
@@ -99,7 +113,9 @@ class _EngineCore:
 
     def __init__(self, broker: Broker, topic: str, pilot: Pilot, workload: Workload,
                  metrics: MetricRegistry, run_id: str, group: str = "engine",
-                 batch_max: int = 8, max_retries: int = 2) -> None:
+                 batch_max: int = 8, max_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 retry_backoff_cap_s: float = 30.0, rng=None) -> None:
         self.broker = broker
         self.topic = topic
         self.pilot = pilot
@@ -109,6 +125,9 @@ class _EngineCore:
         self.group = group
         self.batch_max = batch_max
         self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self._retry_rng = rng          # seeded Generator for backoff jitter
         self.n_partitions = broker.num_partitions(topic)
         self.parts = [_PartitionState() for _ in range(self.n_partitions)]
         self.completed_runtimes: list[float] = []
@@ -121,8 +140,10 @@ class _EngineCore:
         self.processed = 0
         self.failed_batches = 0
         self.abandoned = 0          # actual messages skipped by poison batches
-        self.duplicates = 0
+        self.duplicates = 0          # batch-level duplicate completions
+        self.dup_delivered = 0       # redelivered messages (same stable id)
         self.retried = 0
+        self.seen_ids: set = set()   # stable msg_ids settled as processed
         self._straggler_cache = (0, float("inf"))  # (runtimes seen, timeout)
         # Empty fetches: none schedule events (push engines just go quiet).
         # Grows with completions that catch up to the producer, so it is a
@@ -137,7 +158,14 @@ class _EngineCore:
                                       run_id=self.run_id, partition=partition)
 
     def on_batch_done(self, partition: int, msgs: list[Message], now: float) -> bool:
-        """Commit + metrics; returns False if another copy already won."""
+        """Commit + metrics; returns False if another copy already won.
+
+        Idempotent accounting: a *redelivered* message (same stable
+        ``msg_id``, new offset) commits its offset like any other but
+        settles as ``dup_delivered``, not ``processed`` — so ``processed``
+        stays an exactly-once count despite at-least-once delivery, and a
+        ``complete`` metric event is recorded only for the first copy
+        (keeping latency pairing 1:1)."""
         ps = self.parts[partition]
         key = (msgs[0].offset, msgs[-1].offset + 1)
         if ps.is_done(key):
@@ -146,12 +174,39 @@ class _EngineCore:
             return False
         ps.next_offset = msgs[-1].offset + 1
         self.broker.commit(self.group, self.topic, partition, ps.next_offset)
-        rec = self._rec_complete
-        for m in msgs:
-            rec(now, msg_id=m.msg_id, partition=partition)
+        seen = self.seen_ids
+        fresh = []
+        dups = 0
         with self.counter_lock:
-            self.processed += len(msgs)
+            for m in msgs:
+                mid = m.msg_id
+                if mid is not None and mid in seen:
+                    dups += 1
+                else:
+                    if mid is not None:
+                        seen.add(mid)
+                    fresh.append(m)
+            self.processed += len(fresh)
+            self.dup_delivered += dups
+        rec = self._rec_complete
+        for m in fresh:
+            rec(now, msg_id=m.msg_id, partition=partition)
         return True
+
+    def retry_delay(self, attempt: int) -> float:
+        """Exponential backoff + jitter for retry ``attempt`` (1-based):
+        ``backoff · 2^(attempt-1) · U[0.5, 1.5)`` capped at
+        ``retry_backoff_cap_s``; 0 when backoff is disabled (the default,
+        which keeps the pre-fault-era immediate-retry behaviour)."""
+        base = self.retry_backoff_s
+        if base <= 0.0:
+            return 0.0
+        delay = base * (2.0 ** (attempt - 1))
+        rng = self._retry_rng
+        if rng is not None:
+            with self.counter_lock:    # one rng, many consumer threads
+                delay *= 0.5 + rng.random()
+        return min(delay, self.retry_backoff_cap_s)
 
     @property
     def straggler_timeout(self) -> float:
@@ -185,11 +240,14 @@ class SimStreamingEngine:
                  workload: Workload, metrics: MetricRegistry, run_id: str,
                  *, group: str = "engine", batch_max: int = 8,
                  poll_interval: float = 0.005, max_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
                  straggler_mitigation: bool = True,
                  is_input_complete: Callable[[], bool] | None = None) -> None:
         self.sim = sim
         self.core = _EngineCore(broker, topic, pilot, workload, metrics, run_id,
-                                group=group, batch_max=batch_max, max_retries=max_retries)
+                                group=group, batch_max=batch_max,
+                                max_retries=max_retries,
+                                retry_backoff_s=retry_backoff_s, rng=sim.rng)
         self.poll_interval = poll_interval
         self.straggler_mitigation = straggler_mitigation
         self.is_input_complete = is_input_complete or (lambda: False)
@@ -227,7 +285,8 @@ class SimStreamingEngine:
         core = self.core
         if not self.is_input_complete():
             return False
-        if self._inflight_n or core.processed + core.abandoned < self._appended_seen:
+        if self._inflight_n or core.processed + core.abandoned \
+                + core.dup_delivered < self._appended_seen:
             return False
         ends = core.broker.end_offsets(core.topic)
         if len(core.parts) < len(ends):
@@ -281,6 +340,21 @@ class SimStreamingEngine:
         for p in range(len(self.core.parts)):
             self._drain(p)
 
+    # -- fault surface ---------------------------------------------------------
+    def stall_partition(self, partition: int, duration_s: float) -> None:
+        """Freeze dispatch on ``partition`` for ``duration_s`` virtual
+        seconds (fault injection: a stuck shard).  In-flight batches
+        finish; new fetches wait out the stall, then a scheduled re-drain
+        resumes consumption."""
+        core = self.core
+        if partition >= len(core.parts):
+            self.repartition()
+        ps = core.parts[partition]
+        until = self.sim.now + duration_s
+        if until > ps.stalled_until:
+            ps.stalled_until = until
+            self.sim.schedule_fast(duration_s, lambda: self._drain(partition))
+
     # -- push-dispatched partition consumer -----------------------------------
     def _drain(self, partition: int) -> None:
         """Dispatch the next pending batch of ``partition``, if idle.
@@ -296,6 +370,8 @@ class SimStreamingEngine:
             # append raced ahead of the control loop's repartition call
             self.repartition()
         ps = core.parts[partition]
+        if self.sim.now < ps.stalled_until:
+            return     # stalled: the stall-expiry event re-drains
         if ps.inflight:
             return
         msgs = core.broker.fetch(core.topic, partition, ps.next_offset, core.batch_max)
@@ -307,13 +383,14 @@ class SimStreamingEngine:
         ps.retries = 0
         self._dispatch(partition, msgs, pinned=True)
 
-    def _dispatch(self, partition: int, msgs: list[Message], pinned: bool) -> None:
+    def _dispatch(self, partition: int, msgs: list[Message], pinned: bool,
+                  speculate: bool = True) -> None:
         core = self.core
         desc = core.make_cu_desc(msgs, partition if pinned else None)
         core._rec_dispatch(self.sim.now, partition=partition, batch=len(msgs))
         cu = core.pilot.submit_compute_unit(desc)
         straggler_ev = None
-        if self.straggler_mitigation:
+        if self.straggler_mitigation and speculate:
             timeout = core.straggler_timeout
             if timeout != float("inf"):
                 straggler_ev = self.sim.schedule(
@@ -328,7 +405,13 @@ class SimStreamingEngine:
             return
         core.metrics.record(core.run_id, "engine", "straggler_dup", self.sim.now,
                             partition=partition)
-        self._dispatch(partition, msgs, pinned=False)  # speculative duplicate
+        # at most ONE backup copy per attempt (speculate=False), matching
+        # the threaded engine's _await_first: a speculative copy that arms
+        # its own straggler check breeds copy-of-copy chains whenever the
+        # platform is convoyed (e.g. the HPC model-lock under a burst) —
+        # every copy adds load to the shared bottleneck that made the
+        # primary slow, a positive feedback loop that melts the run
+        self._dispatch(partition, msgs, pinned=False, speculate=False)
 
     def _on_final(self, partition: int, msgs: list[Message], cu,
                   straggler_ev=None) -> None:
@@ -351,9 +434,17 @@ class SimStreamingEngine:
             ps.retries += 1
             core.retried += 1
             pinned = not isinstance(cu.exception, ConnectionError)
+            delay = core.retry_delay(ps.retries)
             core.metrics.record(core.run_id, "engine", "retry", self.sim.now,
-                                partition=partition, attempt=ps.retries)
-            self._dispatch(partition, msgs, pinned=pinned)
+                                partition=partition, attempt=ps.retries,
+                                backoff=delay)
+            if delay > 0.0:
+                # the batch stays in-flight through the backoff window, so
+                # is_finished cannot falsely report a drained topic
+                self.sim.schedule_fast(
+                    delay, lambda: self._dispatch(partition, msgs, pinned=pinned))
+            else:
+                self._dispatch(partition, msgs, pinned=pinned)
         else:
             core.failed_batches += 1
             core.abandoned += len(msgs)
@@ -432,10 +523,15 @@ class ThreadedStreamingEngine:
     def __init__(self, broker: Broker, topic: str, pilot: Pilot, workload: Workload,
                  metrics: MetricRegistry, run_id: str, *, group: str = "engine",
                  batch_max: int = 8, poll_interval: float = 0.01,
-                 max_retries: int = 2) -> None:
+                 max_retries: int = 2, retry_backoff_s: float = 0.0,
+                 straggler_mitigation: bool = True, seed: int = 0) -> None:
         self.core = _EngineCore(broker, topic, pilot, workload, metrics, run_id,
-                                group=group, batch_max=batch_max, max_retries=max_retries)
+                                group=group, batch_max=batch_max,
+                                max_retries=max_retries,
+                                retry_backoff_s=retry_backoff_s,
+                                rng=np.random.default_rng(seed))
         self.poll_interval = poll_interval
+        self.straggler_mitigation = straggler_mitigation
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
         self._wakeups = [threading.Event() for _ in range(self.core.n_partitions)]
@@ -483,10 +579,13 @@ class ThreadedStreamingEngine:
     def ticker_error(self) -> BaseException | None:
         """The first exception a ``call_later`` callback raised, if any.
 
-        A failing callback does not kill the ticker thread, but it DOES
-        silently end anything that re-arms itself from inside its own
-        callback (the control loop's tick never reaches its re-schedule
-        line).  Drivers of a control loop must check this after the run —
+        A failing callback does not kill the ticker thread.  Historically
+        it DID silently end anything that re-arms itself from inside its
+        own callback (the control loop's tick never reached its
+        re-schedule line); ``ControlLoop._tick`` now re-arms in a
+        ``finally`` and surfaces this error on its next tick
+        (``tick_errors`` / the ``autoscale.tick_error`` metric).  Drivers
+        must still check this after the run —
         ``run_adaptation(engine="threaded")`` raises on it — otherwise a
         crashed controller looks like a quiet, successful experiment."""
         return self._ticker.last_error if self._ticker is not None else None
@@ -517,14 +616,53 @@ class ThreadedStreamingEngine:
             if self._started:
                 self._spawn_consumers()
 
+    # -- fault surface ---------------------------------------------------------
+    def stall_partition(self, partition: int, duration_s: float) -> None:
+        """Freeze dispatch on ``partition`` for ``duration_s`` wall seconds
+        (fault injection: a stuck shard).  The in-flight batch finishes;
+        the consumer thread waits out the stall before its next fetch."""
+        if partition >= len(self.core.parts):
+            self.repartition()
+        ps = self.core.parts[partition]
+        until = self.now() + duration_s
+        if until > ps.stalled_until:
+            ps.stalled_until = until     # atomic float store; consumer polls
+
+    def _await_first(self, cu, partition: int, msgs, time_mod):
+        """Block until the primary CU or its speculative duplicate reaches a
+        final state; returns ``(winner, loser)`` (loser may still be running
+        or ``None``).  The speculative copy is dispatched unpinned once the
+        primary exceeds ``straggler_timeout`` — first finisher wins, the
+        conformance twin of the sim engine's ``_straggler_check`` event."""
+        core = self.core
+        spec = None
+        t0 = time_mod.perf_counter()
+        while not self._stop.is_set():
+            if cu.state.is_final:
+                return cu, spec
+            if spec is not None and spec.state.is_final:
+                return spec, cu
+            if spec is None and self.straggler_mitigation:
+                timeout = core.straggler_timeout
+                if timeout != float("inf") \
+                        and time_mod.perf_counter() - t0 > timeout:
+                    core.metrics.record(core.run_id, "engine", "straggler_dup",
+                                        time_mod.perf_counter(),
+                                        partition=partition)
+                    spec = core.pilot.submit_compute_unit(
+                        core.make_cu_desc(msgs, None))
+            cu.done_event.wait(self.poll_interval)
+        return cu, spec     # stopping: the caller checks _stop
+
     def _consume(self, partition: int, time_mod) -> None:
         core = self.core
         ps = core.parts[partition]
         wakeup = self._wakeups[partition]
         while not self._stop.is_set():
-            pause = self._paused_until - time_mod.perf_counter()
+            pause = max(self._paused_until,
+                        ps.stalled_until) - time_mod.perf_counter()
             if pause > 0:
-                # migrating: interruptible sleep, then re-check
+                # migrating or fault-stalled: interruptible sleep, re-check
                 self._stop.wait(min(pause, self.poll_interval))
                 continue
             wakeup.clear()
@@ -539,24 +677,49 @@ class ThreadedStreamingEngine:
             attempts = 0
             while True:
                 cu = core.pilot.submit_compute_unit(core.make_cu_desc(msgs, partition))
-                try:
-                    cu.result()
-                    core.on_batch_done(partition, msgs, time_mod.perf_counter())
-                    core.completed_runtimes.append(cu.runtime)
+                winner, loser = self._await_first(cu, partition, msgs, time_mod)
+                if self._stop.is_set() and not winner.state.is_final:
+                    return
+                if winner.state == State.DONE:
+                    now = time_mod.perf_counter()
+                    if core.on_batch_done(partition, msgs, now):
+                        core.completed_runtimes.append(winner.runtime)
+                    if loser is not None:
+                        # first-finisher-wins: the losing copy must settle
+                        # on the idempotent duplicate path when it lands
+                        # (commit already happened above, so on_batch_done
+                        # sees is_done and counts `duplicates` — identical
+                        # to the sim engine's late-straggler accounting).
+                        # Bind the batch by value: the consumer loop rebinds
+                        # ``msgs`` on its next fetch long before the loser
+                        # finishes, so a late-bound closure would hand
+                        # on_batch_done a different (possibly empty) batch.
+                        loser.add_done_callback(
+                            lambda lo, _msgs=msgs: core.on_batch_done(
+                                partition, _msgs, time_mod.perf_counter())
+                            if lo.state == State.DONE else None)
                     break
-                except Exception:  # noqa: BLE001 — retry loop
-                    attempts += 1
+                # FAILED / CANCELED
+                if core.parts[partition].is_done(
+                        (msgs[0].offset, msgs[-1].offset + 1)):
+                    break   # a speculative duplicate already committed it
+                attempts += 1
+                with core.counter_lock:
+                    core.retried += 1
+                if attempts > core.max_retries:
+                    ps.next_offset = msgs[-1].offset + 1
+                    core.broker.commit(core.group, core.topic, partition, ps.next_offset)
+                    # counted after the commit so drain() can't observe
+                    # the count before the offset has advanced
                     with core.counter_lock:
-                        core.retried += 1
-                    if attempts > core.max_retries:
-                        ps.next_offset = msgs[-1].offset + 1
-                        core.broker.commit(core.group, core.topic, partition, ps.next_offset)
-                        # counted after the commit so drain() can't observe
-                        # the count before the offset has advanced
-                        with core.counter_lock:
-                            core.failed_batches += 1
-                            core.abandoned += len(msgs)
-                        break
+                        core.failed_batches += 1
+                        core.abandoned += len(msgs)
+                    break
+                delay = core.retry_delay(attempts)
+                if delay > 0.0:
+                    self._stop.wait(delay)     # interruptible backoff
+                    if self._stop.is_set():
+                        return
 
     def stop(self, timeout: float = 5.0) -> None:
         """Stop consumers and the ticker; ``timeout`` is a *global*
@@ -579,19 +742,31 @@ class ThreadedStreamingEngine:
             t.join(timeout=max(0.0, deadline - time.perf_counter()))
 
     def drain(self, n_expected: int, timeout: float = 60.0) -> None:
-        """Block until ``n_expected`` messages are accounted for.
+        """Block until ``n_expected`` *unique* messages are accounted for
+        AND the consumer group's lag is zero.
 
         Counts *actual* abandoned messages (``core.abandoned``), not the
         ``failed_batches * batch_max`` estimate the seed used: the final
         batch of a partition can be smaller than ``batch_max``, so the
         estimate over-counted and drain could return with messages still
         pending in the topic.
+
+        Under at-least-once redelivery ``processed`` is an exactly-once
+        count (idempotent accounting), so drained-but-unacked duplicates
+        never double-count toward ``n_expected`` — but their re-appended
+        copies still occupy the log, so the counter check alone could
+        return before the duplicate offsets commit.  The lag conjunct
+        closes that: drain returns only once every appended offset
+        (duplicates included) is committed.
         """
+        core = self.core
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
-            if self.core.processed + self.core.abandoned >= n_expected:
+            if core.processed + core.abandoned >= n_expected \
+                    and core.broker.lag(core.group, core.topic) == 0:
                 return
             time.sleep(self.poll_interval)
         raise TimeoutError(
-            f"drained {self.core.processed}+{self.core.abandoned} abandoned"
-            f"/{n_expected} messages")
+            f"drained {core.processed}+{core.abandoned} abandoned"
+            f"/{n_expected} messages "
+            f"(lag={core.broker.lag(core.group, core.topic)})")

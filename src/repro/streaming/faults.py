@@ -1,0 +1,253 @@
+"""Declarative fault injection: failure semantics as a scenario axis.
+
+Real serverless and HPC platforms fail constantly — container churn, spot
+preemption, batch-queue evictions, stalled shards, redelivered messages —
+and the model-driven controller (``core.autoscale``) is only credible if
+its violations/cost edge survives them.  This module makes those failures
+a *first-class experiment knob*, like partitions or message size:
+
+* ``FaultPlan`` — a seeded, declarative schedule of fault events: crashes
+  and preemptions at explicit times or Poisson rates, partition stalls,
+  duplicate redeliveries.  ``events_for(horizon)`` expands rates into a
+  concrete, deterministic event list (same seed → same schedule).
+* ``FaultInjector`` — binds a plan to a running pipeline through the same
+  ``EngineControlSurface`` the control loop uses (``now``/``call_later``),
+  so the identical plan drives the virtual clock and the wall clock.
+  Crashes and preemptions go through the backend's fault surface
+  (``Backend.inject_crash`` / ``Backend.preempt``); stalls through
+  ``engine.stall_partition``; duplicates are re-appended to the broker
+  with their original stable ``msg_id`` (producer-retry semantics), which
+  the engine's idempotent accounting settles as ``dup_delivered``.
+
+The injector exposes ``window_dirty()`` — a latched "did anything fire (or
+is a stall in effect) since you last asked" read the ``ControlLoop`` uses
+to exclude fault-poisoned windows from the online USL estimator (the
+capacity-revoking faults are already excluded by the granted==target
+gating, because ``effective_allocation`` dips while they are in force).
+
+Plan spec (JSON-able; every key optional):
+
+    dict(seed=0,                    # rate-expansion stream (defaults to the
+                                    # experiment seed)
+         horizon_s=120.0,           # rate-expansion horizon
+         crash_rate_hz=0.05,        # Poisson worker/container crashes
+         duplicate_rate_hz=0.1,     # Poisson duplicate redeliveries
+         stall_rate_hz=0.02,        # Poisson partition stalls ...
+         stall_s=5.0,               # ... of this duration each
+         preempt_times=[45.0, 80.0],  # spot reclamations at these times ...
+         preempt_count=4,           # ... revoking this many units each
+         events=[dict(t=30.0, kind="crash", count=2), ...])  # explicit
+
+Everything on the sim path is deterministic given the seed: rates expand
+through one ``np.random.default_rng(seed)`` stream at plan time, and event
+targets are resolved by a deterministic counter at fire time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+__all__ = ["FaultEvent", "FaultPlan", "FaultInjector", "FAULT_KINDS"]
+
+FAULT_KINDS = ("crash", "stall", "duplicate", "preempt")
+
+
+@dataclass(frozen=True, slots=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    ``target`` is a partition index for stall/duplicate (``None`` → the
+    injector picks round-robin over active partitions); ``duration_s`` is
+    the stall length; ``count`` the multiplicity for crash/preempt.
+    """
+
+    t: float
+    kind: str
+    target: int | None = None
+    duration_s: float = 5.0
+    count: int = 1
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "FaultEvent":
+        kind = spec["kind"]
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}; known: {FAULT_KINDS}")
+        return cls(t=float(spec["t"]), kind=kind,
+                   target=spec.get("target"),
+                   duration_s=float(spec.get("duration_s", 5.0)),
+                   count=int(spec.get("count", 1)))
+
+
+@dataclass
+class FaultPlan:
+    """Seeded, declarative fault schedule (see module docstring for the
+    JSON spec)."""
+
+    seed: int = 0
+    horizon_s: float = 120.0
+    crash_rate_hz: float = 0.0
+    duplicate_rate_hz: float = 0.0
+    stall_rate_hz: float = 0.0
+    stall_s: float = 5.0
+    preempt_times: tuple = ()
+    preempt_count: int = 1
+    events: list = field(default_factory=list)     # explicit FaultEvents
+
+    @classmethod
+    def from_spec(cls, spec: dict, *, default_seed: int = 0,
+                  default_horizon_s: float = 120.0) -> "FaultPlan":
+        unknown = set(spec) - {"seed", "horizon_s", "crash_rate_hz",
+                               "duplicate_rate_hz", "stall_rate_hz", "stall_s",
+                               "preempt_times", "preempt_count", "events"}
+        if unknown:
+            raise ValueError(f"unknown FaultPlan keys: {sorted(unknown)}")
+        return cls(
+            seed=int(spec.get("seed", default_seed)),
+            horizon_s=float(spec.get("horizon_s", default_horizon_s)),
+            crash_rate_hz=float(spec.get("crash_rate_hz", 0.0)),
+            duplicate_rate_hz=float(spec.get("duplicate_rate_hz", 0.0)),
+            stall_rate_hz=float(spec.get("stall_rate_hz", 0.0)),
+            stall_s=float(spec.get("stall_s", 5.0)),
+            preempt_times=tuple(float(t) for t in spec.get("preempt_times", ())),
+            preempt_count=int(spec.get("preempt_count", 1)),
+            events=[FaultEvent.from_spec(e) for e in spec.get("events", ())],
+        )
+
+    def _poisson_times(self, rng: np.random.Generator, rate_hz: float,
+                       horizon: float) -> list[float]:
+        """Deterministic Poisson arrivals on [0, horizon): exponential gaps
+        accumulated from one seeded stream."""
+        times: list[float] = []
+        if rate_hz <= 0.0 or horizon <= 0.0:
+            return times
+        t = float(rng.exponential(1.0 / rate_hz))
+        while t < horizon:
+            times.append(t)
+            t += float(rng.exponential(1.0 / rate_hz))
+        return times
+
+    def events_for(self, horizon_s: float | None = None) -> list[FaultEvent]:
+        """Expand the plan into a concrete, time-sorted event list.
+
+        Rates are sampled in a fixed kind order from one seeded stream, so
+        the schedule is a pure function of the plan — the determinism the
+        fault benchmark cells and the conformance tests rely on.
+        """
+        horizon = self.horizon_s if horizon_s is None else float(horizon_s)
+        rng = np.random.default_rng(self.seed)
+        out: list[FaultEvent] = []
+        for t in self._poisson_times(rng, self.crash_rate_hz, horizon):
+            out.append(FaultEvent(t=t, kind="crash"))
+        for t in self._poisson_times(rng, self.duplicate_rate_hz, horizon):
+            out.append(FaultEvent(t=t, kind="duplicate"))
+        for t in self._poisson_times(rng, self.stall_rate_hz, horizon):
+            out.append(FaultEvent(t=t, kind="stall", duration_s=self.stall_s))
+        for t in self.preempt_times:
+            out.append(FaultEvent(t=float(t), kind="preempt",
+                                  count=self.preempt_count))
+        out.extend(self.events)
+        # (t, kind) sort: ties resolve identically on every run
+        return sorted(out, key=lambda e: (e.t, e.kind, e.count))
+
+
+class FaultInjector:
+    """Binds a ``FaultPlan`` to a live pipeline and fires its events.
+
+    Clock-agnostic by construction: every event is scheduled through the
+    engine's ``call_later`` (DES event on the sim clock, ticker callback on
+    the wall clock), and every action goes through clock-agnostic surfaces
+    (backend fault hooks, ``engine.stall_partition``, ``broker.append``).
+    On the wall-clock path all callbacks run on the single ticker thread —
+    the same thread that runs control ticks — so the counters need no lock.
+    """
+
+    def __init__(self, plan: FaultPlan, engine, broker, topic: str, pilot, *,
+                 metrics=None, run_id: str | None = None) -> None:
+        self.plan = plan
+        self.engine = engine
+        self.broker = broker
+        self.topic = topic
+        self.pilot = pilot
+        self.metrics = metrics
+        self.run_id = run_id
+        # outcome counters (the experiment report card reads these)
+        self.injected = 0
+        self.crashes = 0
+        self.preemptions = 0
+        self.stalls = 0
+        self.dup_injected = 0
+        self.skipped = 0          # events that found nothing to act on
+        self._rr = 0              # deterministic round-robin target pick
+        self._fired_since_probe = 0
+        self._stall_until = 0.0
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self, horizon_s: float | None = None) -> int:
+        """Schedule every plan event relative to ``engine.now()``; returns
+        the number of events armed."""
+        events = self.plan.events_for(horizon_s)
+        for ev in events:
+            self.engine.call_later(ev.t, lambda ev=ev: self._fire(ev))
+        return len(events)
+
+    # -- control-loop signal --------------------------------------------------
+    def window_dirty(self) -> bool:
+        """Latched read: True if any fault fired since the last probe, or a
+        partition stall is still in effect.  The control loop calls this
+        once per tick to mark fault epochs as unstable windows."""
+        dirty = self._fired_since_probe > 0 \
+            or self.engine.now() < self._stall_until
+        self._fired_since_probe = 0
+        return dirty
+
+    # -- firing ----------------------------------------------------------------
+    def _pick_partition(self, ev: FaultEvent) -> int:
+        n = max(1, self.broker.num_partitions(self.topic))
+        if ev.target is not None:
+            return ev.target % n
+        self._rr += 1
+        return (self._rr - 1) % n
+
+    def _fire(self, ev: FaultEvent) -> None:
+        self.injected += 1
+        self._fired_since_probe += 1
+        acted = 0
+        if ev.kind == "crash":
+            acted = self.pilot.backend.inject_crash(self.pilot, ev.count)
+            self.crashes += acted
+        elif ev.kind == "preempt":
+            acted = self.pilot.backend.preempt(self.pilot, ev.count)
+            self.preemptions += acted
+        elif ev.kind == "stall":
+            p = self._pick_partition(ev)
+            self.engine.stall_partition(p, ev.duration_s)
+            until = self.engine.now() + ev.duration_s
+            self._stall_until = max(self._stall_until, until)
+            self.stalls += 1
+            acted = 1
+        elif ev.kind == "duplicate":
+            acted = self._inject_duplicate(ev)
+        if not acted:
+            self.skipped += 1
+        if self.metrics is not None and self.run_id is not None:
+            self.metrics.record(self.run_id, "fault", ev.kind,
+                                self.engine.now(), count=ev.count, acted=acted)
+
+    def _inject_duplicate(self, ev: FaultEvent) -> int:
+        """Re-append the newest message of a partition with its original
+        stable ``msg_id`` — the broker-side shape of a producer retry /
+        redelivery.  The engine commits the new offset but settles the
+        message as ``dup_delivered``, not ``processed``."""
+        p = self._pick_partition(ev)
+        end = self.broker.end_offset(self.topic, p)
+        if end == 0:
+            return 0
+        orig = self.broker.fetch(self.topic, p, end - 1, 1)[0]
+        self.broker.append(self.topic, orig.value, ts=self.engine.now(),
+                           key=orig.key, partition=p, run_id=orig.run_id,
+                           msg_id=orig.msg_id, size_bytes=orig.size_bytes)
+        self.dup_injected += 1
+        return 1

@@ -17,21 +17,31 @@ one engine transfer to the other:
   the ``ControlLoop`` needs, so the identical controller runs on either
   clock.
 
+* **failure semantics** — crash-retry, duplicate redelivery (idempotent
+  accounting on stable msg_ids), preemption revoke/restore and speculative
+  straggler re-execution must produce identical message counts on either
+  clock, so a fault scenario characterized on the sim transfers to the
+  wall-clock deployment.
+
 Plus the threaded-engine ``stop`` regression: the shutdown deadline is
 global, not per-consumer.
 """
 
+import itertools
 import time
 
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from conftest import wait_until
-from repro.core.autoscale import EngineControlSurface
+from repro.core.autoscale import ControlLoop, EngineControlSurface
 from repro.core.metrics import MetricRegistry, new_run_id
 from repro.pilot.api import PilotComputeService, PilotDescription, TaskProfile
 from repro.streaming.broker import Broker
 from repro.streaming.engine import (SimStreamingEngine,
-                                    ThreadedStreamingEngine, Workload)
+                                    ThreadedStreamingEngine, Workload,
+                                    _EngineCore)
 
 POISON = "poison"
 
@@ -45,7 +55,8 @@ class _Harness:
     """
 
     def __init__(self, kind: str, partitions: int = 2, batch_max: int = 2,
-                 max_retries: int = 1) -> None:
+                 max_retries: int = 1, attrs: dict | None = None,
+                 fn=None, profile_for=None) -> None:
         self.kind = kind
         self.broker = Broker()
         self.topic = "t"
@@ -53,19 +64,21 @@ class _Harness:
         self.metrics = MetricRegistry()
         self.run_id = new_run_id(f"conform-{kind}")
         self.produced = 0
+        self.redelivered = 0
         self._input_done = False
         self.pcs = PilotComputeService(seed=0)
 
-        def fn(msgs) -> None:
+        def default_fn(msgs) -> None:
             if any(m.value == POISON for m in msgs):
                 raise RuntimeError("poison batch")
 
         profile = TaskProfile(flops=1e7)
-        workload = Workload(profile_for=lambda msgs: profile, fn=fn,
-                            name="conform")
+        workload = Workload(profile_for=profile_for or (lambda msgs: profile),
+                            fn=fn or default_fn, name="conform")
         if kind == "sim":
             self.pilot = self.pcs.submit_pilot(PilotDescription(
-                resource="serverless://aws-sim", partitions=8, concurrency=8))
+                resource="serverless://aws-sim", partitions=8, concurrency=8,
+                attrs=dict(attrs or {})))
             self.engine = SimStreamingEngine(
                 self.pilot.backend.sim, self.broker, self.topic, self.pilot,
                 workload, self.metrics, self.run_id, batch_max=batch_max,
@@ -73,7 +86,7 @@ class _Harness:
                 is_input_complete=lambda: self._input_done)
         else:
             self.pilot = self.pcs.submit_pilot(PilotDescription(
-                resource="local://", concurrency=8))
+                resource="local://", concurrency=8, attrs=dict(attrs or {})))
             self.engine = ThreadedStreamingEngine(
                 self.broker, self.topic, self.pilot, workload, self.metrics,
                 self.run_id, batch_max=batch_max, max_retries=max_retries,
@@ -86,6 +99,15 @@ class _Harness:
                                partition=partition, run_id=self.run_id)
             self.produced += 1
 
+    def redeliver(self, partition: int, offset: int) -> None:
+        """Re-append an already-appended message with its original stable
+        id — the broker-side shape of an at-least-once redelivery."""
+        orig = self.broker.fetch(self.topic, partition, offset, 1)[0]
+        self.broker.append(self.topic, orig.value, ts=self.engine.now(),
+                           key=orig.key, partition=partition,
+                           run_id=orig.run_id, msg_id=orig.msg_id)
+        self.redelivered += 1
+
     def finish(self, timeout: float = 30.0) -> None:
         core = self.engine.core
         if self.kind == "sim":
@@ -94,6 +116,7 @@ class _Harness:
         else:
             self.engine.drain(self.produced, timeout=timeout)
         assert core.processed + core.abandoned == self.produced
+        assert core.dup_delivered == self.redelivered
 
     def close(self) -> None:
         if self.kind == "threaded":
@@ -193,6 +216,243 @@ def test_grow_append_races_ahead_of_repartition(kind):
         h.produce(range(3), partition=2)     # no engine.repartition() call
         h.finish()
         assert h.engine.core.processed == 3
+    finally:
+        h.close()
+
+
+# -- failure semantics parity -------------------------------------------------
+
+def test_crash_retry_succeeds(kind):
+    """A worker crash mid-batch costs a retry, never a message: the failed
+    batch re-dispatches and commits, with identical counts on both engines."""
+    h = make(kind, partitions=2, batch_max=2, max_retries=2)
+    try:
+        if h.kind == "sim":
+            # occupy containers first so the crash has a busy victim whose
+            # in-flight batch fails with ConnectionError
+            h.produce(range(8))
+            assert h.pilot.backend.inject_crash(h.pilot, 1) == 1
+        else:
+            # the local pool arms a crash budget: the next executed task
+            # raises ConnectionError regardless of production timing
+            assert h.pilot.backend.inject_crash(h.pilot, 1) == 1
+            h.produce(range(8))
+        h.finish()
+        core = h.engine.core
+        assert core.processed == 8 and core.abandoned == 0
+        assert core.retried >= 1
+        for p, end in enumerate(h.broker.end_offsets(h.topic)):
+            assert h.broker.committed("engine", h.topic, p) == end
+    finally:
+        h.close()
+
+
+def test_duplicate_delivery_is_idempotent(kind):
+    """At-least-once redelivery: the same stable msg_id re-appended at a new
+    offset commits its offset but settles as ``dup_delivered`` — ``processed``
+    stays an exactly-once count on both engines."""
+    h = make(kind, partitions=1, batch_max=2)
+    try:
+        h.produce(range(5), partition=0)
+        h.redeliver(0, 1)
+        h.redeliver(0, 3)
+        h.finish()
+        core = h.engine.core
+        assert core.processed == 5
+        assert core.dup_delivered == 2
+        end = h.broker.end_offsets(h.topic)[0]
+        assert end == 7
+        assert h.broker.committed("engine", h.topic, 0) == 7
+    finally:
+        h.close()
+
+
+def test_preemption_revokes_then_restores(kind):
+    """Spot-style preemption takes granted capacity away *through the
+    backend* (``effective_allocation`` dips below the target) and hands it
+    back after ``preempt_restore_s`` — and the pipeline still drains."""
+    h = make(kind, attrs={"preempt_restore_s": 0.3})
+    backend = h.pilot.backend
+    try:
+        before = backend.effective_allocation(h.pilot)
+        assert before == backend.allocation(h.pilot)
+        assert backend.preempt(h.pilot, 2) == 2
+        assert backend.effective_allocation(h.pilot) == before - 2
+        assert backend.allocation(h.pilot) == before   # target unchanged
+        h.produce(range(10))
+        h.finish()
+        assert h.engine.core.processed == 10
+        if h.kind == "sim":
+            h.engine.sim.run_until(t=h.engine.sim.now + 2.0)
+            assert backend.effective_allocation(h.pilot) == before
+        else:
+            wait_until(lambda: backend.effective_allocation(h.pilot) == before,
+                       timeout=5.0, message="preempted capacity restored")
+    finally:
+        h.close()
+
+
+def test_speculative_straggler_first_finisher_wins(kind):
+    """A batch stuck far past the runtime median gets a speculative second
+    execution; the first finisher commits, the loser settles as a duplicate.
+    The slow-once workload makes execution 1 of the straggler batch slow and
+    every re-execution fast, on either engine."""
+    dispatches = {}
+
+    def nth_dispatch(msgs) -> int:
+        k = msgs[0].offset
+        dispatches[k] = n = dispatches.get(k, 0) + 1
+        return n
+
+    if kind == "sim":
+        def profile_for(msgs):
+            slow = (any(m.value == "straggler" for m in msgs)
+                    and nth_dispatch(msgs) == 1)
+            return TaskProfile(flops=1e12 if slow else 1e7)
+
+        h = make("sim", partitions=1, batch_max=1, profile_for=profile_for)
+    else:
+        def fn(msgs) -> None:
+            if (any(m.value == "straggler" for m in msgs)
+                    and nth_dispatch(msgs) == 1):
+                time.sleep(1.0)  # simlint: allow[test-sleep] — the deliberately stuck first execution the speculative copy must outrun, not a synchronization wait
+
+        h = make("threaded", partitions=1, batch_max=1, fn=fn)
+    try:
+        core = h.engine.core
+        # ≥3 completed runtimes before the straggler, so the 4×median
+        # timeout is armed (it is inf while the sample is too small)
+        h.produce(range(4), partition=0)
+        if h.kind == "threaded":
+            wait_until(lambda: core.processed >= 4, timeout=10.0,
+                       message="runtime sample warmed up")
+        h.produce(["straggler"], partition=0)
+        h.finish()
+        assert core.processed == 5 and core.abandoned == 0
+        assert h.broker.committed("engine", h.topic, 0) == 5
+        # the losing copy lands after the drain: run the sim past the slow
+        # execution / wait out the sleeping thread, then it must settle on
+        # the idempotent duplicate path, not double-count
+        if h.kind == "sim":
+            h.engine.sim.run_until(t=h.engine.sim.now + 1e6)
+        else:
+            wait_until(lambda: core.duplicates >= 1, timeout=10.0,
+                       message="losing copy settled as duplicate")
+        assert core.duplicates >= 1
+        assert core.processed == 5
+    finally:
+        h.close()
+
+
+# -- at-least-once accounting properties (core-level) -------------------------
+
+def _bare_core(broker: Broker, batch_max: int = 4) -> _EngineCore:
+    return _EngineCore(broker, "t", None, Workload(fn=lambda msgs: None,
+                                                   name="prop"),
+                       MetricRegistry(), new_run_id("prop"),
+                       batch_max=batch_max)
+
+
+@given(st.lists(st.integers(min_value=1, max_value=4), min_size=1, max_size=6),
+       st.lists(st.integers(min_value=0, max_value=63), min_size=0,
+                max_size=6))
+@settings(max_examples=8)
+def test_ack_offsets_monotone_under_redelivery(batch_sizes, redeliver_picks):
+    """Per-partition ack offsets never regress, every batch completion
+    commits exactly to its last offset + 1, and the exactly-once identity
+    ``processed + dup_delivered == appended`` holds for any interleaving of
+    fresh messages and stable-id redeliveries."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    core = _bare_core(broker)
+    n_orig = sum(batch_sizes)
+    for i in range(n_orig):
+        broker.append("t", i, ts=0.0, partition=0)
+    originals = broker.fetch("t", 0, 0, n_orig)
+    for pick in redeliver_picks:
+        orig = originals[pick % n_orig]
+        broker.append("t", orig.value, ts=0.0, partition=0,
+                      msg_id=orig.msg_id)
+    total = n_orig + len(redeliver_picks)
+    sizes = itertools.cycle(batch_sizes)
+    last_commit = 0
+    off = 0
+    while off < total:
+        batch = broker.fetch("t", 0, off, next(sizes))
+        assert core.on_batch_done(0, batch, now=0.0)
+        c = broker.committed("engine", "t", 0)
+        assert c == batch[-1].offset + 1
+        assert c >= last_commit
+        last_commit = c
+        off += len(batch)
+    assert broker.committed("engine", "t", 0) == broker.end_offset("t", 0)
+    assert core.processed == n_orig
+    assert core.dup_delivered == len(redeliver_picks)
+    assert core.processed + core.dup_delivered == broker.appended_total("t")
+
+
+@given(st.lists(st.integers(min_value=1, max_value=3), min_size=2, max_size=6))
+@settings(max_examples=8)
+def test_replayed_batch_completion_never_regresses(batch_sizes):
+    """Completing an already-completed batch (a straggler's losing copy, a
+    redundant speculative execution) counts as a ``duplicates`` event and
+    leaves both the commit offset and ``processed`` untouched."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    core = _bare_core(broker)
+    total = sum(batch_sizes)
+    for i in range(total):
+        broker.append("t", i, ts=0.0, partition=0)
+    done = []
+    off = 0
+    for size in batch_sizes:
+        batch = broker.fetch("t", 0, off, size)
+        assert core.on_batch_done(0, batch, now=0.0)
+        done.append(batch)
+        commit = broker.committed("engine", "t", 0)
+        replay = done[len(done) // 2]
+        assert core.on_batch_done(0, replay, now=0.0) is False
+        assert broker.committed("engine", "t", 0) == commit
+        off += len(batch)
+    assert core.processed == total
+    assert core.duplicates == len(batch_sizes)
+    assert broker.committed("engine", "t", 0) == broker.end_offset("t", 0)
+
+
+# -- control-loop resilience (regression) -------------------------------------
+
+def test_control_loop_survives_one_tick_failure():
+    """A single raising policy tick must not silently kill the loop: the
+    re-arm runs in a ``finally``, so ticking continues, and the failure is
+    surfaced on the next tick (``tick_errors``) instead of leaving a quiet
+    half-run report card.  (The seed re-armed as the last line of the tick
+    body — one transient backend error ended adaptation for the rest of the
+    run without a trace.)"""
+    h = make("threaded")
+    try:
+        class _FlakyPolicy:
+            name = "flaky"
+
+            def __init__(self):
+                self.calls = 0
+
+            def decide(self, obs):
+                self.calls += 1
+                if self.calls == 1:
+                    raise ValueError("transient tick failure")
+                return obs.allocation
+
+        policy = _FlakyPolicy()
+        loop = ControlLoop(h.engine, h.broker, h.topic, h.pilot, policy,
+                           metrics=h.metrics, run_id=h.run_id,
+                           interval_s=0.02)
+        loop.start()
+        wait_until(lambda: loop.ticks >= 3, timeout=5.0,
+                   message="loop kept ticking past the failed tick")
+        loop.stop()
+        assert policy.calls >= 3
+        assert loop.tick_errors >= 1
+        assert isinstance(h.engine.ticker_error, ValueError)
     finally:
         h.close()
 

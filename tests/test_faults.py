@@ -1,0 +1,186 @@
+"""Fault injection as a scenario axis: plan expansion, injector wiring,
+control-loop awareness, and the backends' fault surfaces.
+
+What must hold:
+
+* ``FaultPlan`` specs are validated (unknown keys / kinds fail loudly) and
+  rate expansion is a pure function of the seed — same seed, same schedule.
+* A faulted adaptation run is deterministic end to end on the sim clock,
+  loses no messages, and reports its fault epochs (``fault_windows``) so
+  the online estimator's exclusion of poisoned windows is observable.
+* The hpcsim batch-queue wait honours the configured log-normal quantiles
+  (seeded, per-pilot) and degenerates to the flat ``grant_delay_s`` when
+  unconfigured — the fig8 calibration path is bit-preserved.
+"""
+
+import math
+import statistics
+
+import pytest
+
+from repro.core.miniapp import AdaptationExperiment, run_adaptation
+from repro.pilot.api import PilotComputeService, PilotDescription
+from repro.streaming.faults import FAULT_KINDS, FaultEvent, FaultPlan
+
+FAULT_SPEC = dict(crash_rate_hz=0.08, duplicate_rate_hz=0.05,
+                  stall_rate_hz=0.02, stall_s=3.0,
+                  preempt_times=[35.0, 70.0], preempt_count=2)
+
+
+# -- plan validation and expansion --------------------------------------------
+
+def test_unknown_plan_key_rejected():
+    with pytest.raises(ValueError, match="unknown FaultPlan keys"):
+        FaultPlan.from_spec(dict(crash_rate=0.1))     # typo'd key
+
+
+def test_unknown_event_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.from_spec(dict(events=[dict(t=1.0, kind="meteor")]))
+
+
+def test_event_defaults_from_spec():
+    ev = FaultEvent.from_spec(dict(t=2.5, kind="stall"))
+    assert ev.t == 2.5 and ev.kind == "stall"
+    assert ev.target is None and ev.count == 1 and ev.duration_s == 5.0
+
+
+def test_events_for_is_deterministic_and_bounded():
+    plan = FaultPlan.from_spec(dict(FAULT_SPEC, seed=7), default_horizon_s=90.0)
+    a = plan.events_for()
+    b = FaultPlan.from_spec(dict(FAULT_SPEC, seed=7),
+                            default_horizon_s=90.0).events_for()
+    assert a == b                                      # pure function of seed
+    assert a == sorted(a, key=lambda e: (e.t, e.kind, e.count))
+    assert all(e.kind in FAULT_KINDS for e in a)
+    # rate events respect the horizon; explicit preempts land verbatim
+    assert all(e.t < 90.0 for e in a if e.kind != "preempt")
+    assert [e.t for e in a if e.kind == "preempt"] == [35.0, 70.0]
+    assert all(e.count == 2 for e in a if e.kind == "preempt")
+    other = FaultPlan.from_spec(dict(FAULT_SPEC, seed=8),
+                                default_horizon_s=90.0).events_for()
+    assert other != a                                  # the seed matters
+
+
+def test_seed_defaults_to_experiment_seed():
+    plan = FaultPlan.from_spec(dict(crash_rate_hz=0.1), default_seed=13,
+                               default_horizon_s=60.0)
+    assert plan.seed == 13 and plan.horizon_s == 60.0
+
+
+# -- faulted adaptation runs (sim clock) --------------------------------------
+
+def _fault_cell(machine: str, **kw) -> AdaptationExperiment:
+    kw.setdefault("faults", dict(FAULT_SPEC, seed=3))
+    return AdaptationExperiment(
+        machine=machine, scaling_policy="reactive",
+        rate=dict(kind="step", base_hz=2.0, high_hz=8.0, t_step=20.0),
+        horizon_s=60.0, control_interval_s=2.0, initial_partitions=2,
+        max_partitions=8, points=2000, centroids=256, seed=3,
+        max_retries=5, retry_backoff_s=0.1, **kw)
+
+
+def _fingerprint(res) -> tuple:
+    return (res.processed, res.produced, res.abandoned, res.dup_delivered,
+            res.faults_injected, res.preemptions, res.fault_windows,
+            res.lost, res.slo_violations, round(res.cost_integral, 9),
+            tuple(map(tuple, res.alloc_trace)))
+
+
+@pytest.mark.parametrize("machine", ["serverless", "wrangler"])
+def test_faulted_run_is_deterministic_and_lossless(machine):
+    a = run_adaptation(_fault_cell(machine))
+    b = run_adaptation(_fault_cell(machine))
+    assert _fingerprint(a) == _fingerprint(b)          # bit-identical rerun
+    assert a.faults_injected > 0 and a.preemptions > 0
+    assert a.dup_delivered > 0                          # redelivery exercised
+    assert a.lost == 0                                  # at-least-once held
+    assert a.drained
+    assert a.fault_windows > 0                          # loop saw the faults
+
+
+def test_fault_free_run_reports_clean_card():
+    res = run_adaptation(_fault_cell("serverless", faults=None))
+    assert res.faults_injected == 0 and res.preemptions == 0
+    assert res.dup_delivered == 0 and res.fault_windows == 0
+    assert res.lost == 0
+
+
+def test_faults_change_the_run():
+    faulted = run_adaptation(_fault_cell("serverless"))
+    clean = run_adaptation(_fault_cell("serverless", faults=None))
+    # the injected duplicates alone force a different settled count
+    assert faulted.dup_delivered != clean.dup_delivered
+
+
+def test_fault_seed_changes_the_schedule_not_the_accounting():
+    a = run_adaptation(_fault_cell("serverless"))
+    b = run_adaptation(_fault_cell("serverless",
+                                   faults=dict(FAULT_SPEC, seed=4)))
+    assert a.lost == 0 and b.lost == 0                 # invariant under seed
+    assert _fingerprint(a) != _fingerprint(b)          # schedule differs
+
+
+# -- hpcsim batch-queue wait distribution -------------------------------------
+
+def _hpc_pilot(pcs: PilotComputeService, attrs: dict):
+    return pcs.submit_pilot(PilotDescription(
+        resource="hpc://wrangler-sim", number_of_nodes=4, cores_per_node=4,
+        attrs=attrs))
+
+
+def test_queue_wait_defaults_to_flat_grant_delay():
+    pcs = PilotComputeService(seed=0)
+    try:
+        pilot = _hpc_pilot(pcs, {})
+        backend = pilot.backend
+        st = backend._pilots[pilot.uid]
+        waits = {backend._queue_wait(st) for _ in range(16)}
+        assert waits == {st["cfg"]["grant_delay_s"]}   # degenerate, no draw
+    finally:
+        pcs.close()
+
+
+def test_queue_wait_matches_configured_quantiles():
+    pcs = PilotComputeService(seed=0)
+    try:
+        pilot = _hpc_pilot(pcs, dict(queue_wait_p50_s=5.0,
+                                     queue_wait_p95_s=40.0))
+        backend = pilot.backend
+        st = backend._pilots[pilot.uid]
+        waits = sorted(backend._queue_wait(st) for _ in range(4000))
+        assert all(w > 0.0 for w in waits)
+        p50 = statistics.median(waits)
+        p95 = waits[int(0.95 * len(waits))]
+        assert math.isclose(p50, 5.0, rel_tol=0.15)
+        assert math.isclose(p95, 40.0, rel_tol=0.25)   # heavy tail, wide band
+    finally:
+        pcs.close()
+
+
+def test_queue_wait_stream_is_seeded_per_pilot():
+    def sample(seed: int) -> list[float]:
+        pcs = PilotComputeService(seed=seed)
+        try:
+            pilot = _hpc_pilot(pcs, dict(queue_wait_p50_s=5.0,
+                                         queue_wait_p95_s=40.0))
+            st = pilot.backend._pilots[pilot.uid]
+            return [pilot.backend._queue_wait(st) for _ in range(32)]
+        finally:
+            pcs.close()
+
+    assert sample(0) == sample(0)                      # same seed, same draws
+    assert sample(0) != sample(1)
+
+
+def test_degenerate_quantiles_fall_back_to_p50():
+    """p95 <= p50 (or p50 <= 0) cannot shape a log-normal: the wait
+    degenerates to the p50 value instead of producing NaNs."""
+    pcs = PilotComputeService(seed=0)
+    try:
+        pilot = _hpc_pilot(pcs, dict(queue_wait_p50_s=5.0,
+                                     queue_wait_p95_s=5.0))
+        st = pilot.backend._pilots[pilot.uid]
+        assert {pilot.backend._queue_wait(st) for _ in range(8)} == {5.0}
+    finally:
+        pcs.close()
