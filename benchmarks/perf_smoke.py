@@ -53,6 +53,17 @@ The fault-injection layer writes ``BENCH_faults.json``:
   policy must still beat the reactive baseline on SLO violations at
   equal-or-lower cost (the fig8 fault row, one seed).
 
+The federation layer writes ``BENCH_federation.json``:
+
+* ``overhead_x`` — a single-member ``FederatedBackend`` wrapping the
+  serverless backend must run the reference adaptation cell within 5% of
+  the bare backend: routing, health EWMAs and the member ledger are free
+  when there is nothing to federate.
+* ``lost_outage`` / ``dirty_samples`` / ``readmitted`` — a full member
+  outage mid-run must close the at-least-once ledger exactly (``lost ==
+  0``, nothing abandoned), admit ZERO estimator samples from
+  fault-dirtied windows, and walk the circuit breaker back to ``closed``.
+
     PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 
@@ -129,6 +140,23 @@ FAULT_PREEMPT_TIMES = [35.0, 60.0, 85.0]
 FAULT_PREEMPT_COUNT = 3
 FAULT_CRASH_FRAC = 0.01
 FAULTS_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_faults.json"
+
+# -- federation gates ---------------------------------------------------------
+# A single-member federation is pure indirection: the routing/health/ledger
+# bookkeeping must cost ≤5% of the bare backend on the reference adaptation
+# cell (same self-retry as the other wall-ratio gates).  The member-outage
+# cell then proves the robustness invariants: a whole member dies mid-run
+# and the at-least-once ledger still closes (lost == 0) with ZERO estimator
+# samples admitted from fault-dirtied windows.
+FED_OVERHEAD_X = 1.05
+FED_OVERHEAD_ATTEMPTS = 8  # each attempt is ~0.5 s of interleaved pairs
+FED_OUTAGE = dict(t=45.0, kind="backend_outage", target=0, duration_s=25.0)
+FED_MEMBERS = [
+    dict(name="aws", machine="serverless", price=1.0, usl=(0.05, 1e-3, 2.0)),
+    dict(name="wrangler", machine="wrangler", price=0.6,
+         usl=(0.1, 5e-4, 1.9), grant_latency_s=10.0),
+]
+FEDERATION_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_federation.json"
 
 # -- simlint (informational) --------------------------------------------------
 # a full-repo analyzer sweep rides in the pre-commit/tier-1 path, so its
@@ -420,6 +448,86 @@ def faults_gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
     return rows
 
 
+def run_federation() -> dict:
+    """Federation section: the single-member indirection overhead and the
+    member-outage robustness invariants (see the FED_* block above)."""
+    report: dict = {}
+    # 1) overhead: the same adaptation cell, bare backend vs a
+    # single-member federation wrapping that backend
+    bare = AdaptationExperiment(
+        machine="serverless", scaling_policy="usl", rate=dict(ADAPT_RATE),
+        horizon_s=120.0, max_partitions=16, seed=0, **ADAPT_USL_PARAMS)
+    fed = dataclasses.replace(
+        bare, machine="federated",
+        federation=dict(members=[dict(machine="serverless")]))
+    res_bare = run_adaptation(bare)               # warm both paths
+    res_fed = run_adaptation(fed)
+    # the ~3% true wrapper cost is far below this container's throttle
+    # noise, so the measurement interleaves bare/fed runs (a burst hits
+    # both sides) and self-retries like the sweep gate
+    ratio = float("inf")
+    for attempt in range(1, FED_OVERHEAD_ATTEMPTS + 1):
+        wall_bare = wall_fed = float("inf")
+        for _ in range(5):
+            wall_bare = min(wall_bare,
+                            _best_wall(lambda: run_adaptation(bare), repeats=1))
+            wall_fed = min(wall_fed,
+                           _best_wall(lambda: run_adaptation(fed), repeats=1))
+        if wall_fed / max(wall_bare, 1e-9) < ratio:
+            best_bare, best_fed = wall_bare, wall_fed
+            ratio = wall_fed / max(wall_bare, 1e-9)
+        if ratio <= FED_OVERHEAD_X:
+            break
+    report["overhead"] = {
+        "wall_bare_s": round(best_bare, 4), "wall_fed_s": round(best_fed, 4),
+        "ratio_x": round(ratio, 3), "attempts": attempt,
+        "processed_bare": res_bare.processed, "processed_fed": res_fed.processed,
+        "drained": bool(res_bare.drained and res_fed.drained),
+    }
+    # 2) member outage: a whole member dies for 25 s mid-run — at-least-
+    # once must close exactly and fault-dirtied windows must contribute
+    # zero estimator samples
+    outage = AdaptationExperiment(
+        machine="federated", policy="update_locked", scaling_policy="usl",
+        usl_sigma=0.05, usl_kappa=1e-3, usl_gamma=2.0,
+        federation=dict(members=[dict(m) for m in FED_MEMBERS]),
+        rate=dict(kind="step", base_hz=2.0, high_hz=8.0, t_step=20.0),
+        horizon_s=120.0, initial_partitions=2, max_partitions=8,
+        points=2000, centroids=256, seed=0, max_retries=12,
+        retry_backoff_s=0.1, faults=dict(events=[dict(FED_OUTAGE)]))
+    res = run_adaptation(outage)
+    ledger = res.member_ledger
+    outaged = ledger[FED_OUTAGE["target"]]
+    report["outage"] = {
+        "lost": res.lost, "abandoned": res.abandoned,
+        "drained": bool(res.drained), "processed": res.processed,
+        "opens": outaged["opens"],
+        "readmitted": outaged["state"] == "closed",
+        "bill": round(sum(m["cost_integral"] for m in ledger), 1),
+        "est_samples": sum(m["est_samples"] for m in ledger),
+        "dirty_windows": sum(m["dirty_windows"] for m in ledger),
+        "dirty_samples": sum(m["dirty_samples"] for m in ledger),
+    }
+    return report
+
+
+def federation_gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
+    ov, out = report["overhead"], report["outage"]
+    return [
+        ("federation", "overhead_x", f"{ov['wall_bare_s']:g}",
+         f"{ov['ratio_x']:g}", f"<={FED_OVERHEAD_X:g}x",
+         ov["ratio_x"] <= FED_OVERHEAD_X and ov["drained"]),
+        ("federation", "lost_outage", "-", str(out["lost"]), "==0",
+         out["lost"] == 0 and out["abandoned"] == 0 and out["drained"]),
+        ("federation", "dirty_samples", str(out["dirty_windows"]),
+         str(out["dirty_samples"]), "==0",
+         out["dirty_samples"] == 0 and out["dirty_windows"] > 0),
+        ("federation", "readmitted", str(out["opens"]),
+         str(out["readmitted"]), "==True",
+         out["readmitted"] and out["opens"] >= 1),
+    ]
+
+
 def autoscale_gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
     frac = report["budget_frac"]
     return [
@@ -497,12 +605,16 @@ def main() -> None:
     AUTOSCALE_OUT_PATH.write_text(json.dumps(autoscale_report, indent=2) + "\n")
     faults_report = run_faults()
     FAULTS_OUT_PATH.write_text(json.dumps(faults_report, indent=2) + "\n")
+    federation_report = run_federation()
+    FEDERATION_OUT_PATH.write_text(
+        json.dumps(federation_report, indent=2) + "\n")
     rows = gates(report) + usl_gates(usl_report) \
         + autoscale_gates(autoscale_report) + faults_gates(faults_report) \
-        + simlint_rows(run_simlint())
+        + federation_gates(federation_report) + simlint_rows(run_simlint())
     width = (12, 14, 10, 10, 8)
     print(f"perf_smoke: wrote {OUT_PATH.name}, {USL_OUT_PATH.name}, "
-          f"{AUTOSCALE_OUT_PATH.name} and {FAULTS_OUT_PATH.name}")
+          f"{AUTOSCALE_OUT_PATH.name}, {FAULTS_OUT_PATH.name} and "
+          f"{FEDERATION_OUT_PATH.name}")
     print("  scope        metric         before     after      gate      result")
     failed = False
     for scope, metric, before, after, gate, ok in rows:

@@ -136,6 +136,10 @@ DEFAULT_MANIFEST = Manifest(
         "*/repro/pilot/api.py",
         "*/repro/pilot/backends/hpcsim.py",
         "*/repro/pilot/backends/serverless.py",
+        # the federation composes sim backends on one shared Simulator and
+        # is lock-free: health/breaker/placement decisions are pure
+        # functions of the virtual clock and CU completions
+        "*/repro/pilot/backends/federated.py",
     ),
     wall_modules=(
         "*/repro/pilot/backends/local.py",

@@ -528,6 +528,10 @@ class ControlLoop:
         self.refit_events = 0
         self.fault_windows = 0            # ticks whose window saw a fault
         self.tick_errors = 0              # surfaced ticker-callback failures
+        # bounded diagnosis ring: the last 16 (sim_ts, repr(exc)) entries —
+        # a flapping policy is diagnosable from the report card, not just
+        # countable (tick_errors keeps the total)
+        self.tick_error_log: deque = deque(maxlen=16)
         self._ticker_error_seen = False
         self.cost_integral = 0.0          # ∫ allocation dt
         self._stopped = False
@@ -625,13 +629,21 @@ class ControlLoop:
     def _tick_locked(self) -> None:
         if self._stopped:
             return
-        err = getattr(self.engine, "ticker_error", None)
-        if err is not None and not self._ticker_error_seen:
+        drain = getattr(self.engine, "drain_ticker_errors", None)
+        if drain is not None:
+            errs = drain()
+        else:
+            # engines without a drainable history surface only the root
+            # cause once (the pre-ring behaviour)
+            err = getattr(self.engine, "ticker_error", None)
+            errs = [] if err is None or self._ticker_error_seen else [err]
+        for err in errs:
             # a ticker callback (this tick or any other call_later client)
-            # failed since the last probe: count it and trace it so a
-            # crashed-then-recovered controller is visible in the report
+            # failed since the last probe: count it, ring-buffer it and
+            # trace it so a crashed-then-recovered controller is visible
             self._ticker_error_seen = True
             self.tick_errors += 1
+            self.tick_error_log.append((self.engine.now(), repr(err)))
             self.metrics.record(self.run_id, "autoscale", "tick_error",
                                 self.engine.now(), error=repr(err))
         obs = self.observe()

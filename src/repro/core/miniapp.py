@@ -128,11 +128,16 @@ class _PlatformCell:
     the ``policy`` field this reads)."""
 
     machine: str = "serverless"         # serverless | wrangler | stampede2
+                                        # | federated (members via the
+                                        # experiment's federation spec)
 
     @property
     def resource_url(self) -> str:
-        return ("serverless://aws-sim" if self.machine == "serverless"
-                else f"hpc://{self.machine}-sim")
+        if self.machine == "serverless":
+            return "serverless://aws-sim"
+        if self.machine == "federated":
+            return "federated://mix"
+        return f"hpc://{self.machine}-sim"
 
     @property
     def effective_policy(self) -> str:
@@ -262,6 +267,9 @@ class AdaptationExperiment(_PlatformCell):
     refit_window: int = 128            # usl_online: sliding sample window
     refit_half_life_s: float = 45.0    # usl_online: recency-weight half-life
     threaded_service_s: float | None = None   # wall s/msg (None → 1/gamma)
+    federation: dict | None = None     # machine="federated": member specs +
+                                       # breaker/placement knobs (see
+                                       # pilot.backends.federated)
 
     def cost_estimate(self) -> float:
         """Work estimate for the serial-vs-pooled auto-switch (same units
@@ -298,6 +306,11 @@ class AdaptationResult:
     preemptions: int = 0               # capacity-revocation events
     fault_windows: int = 0             # control windows dirtied by faults
     lost: int = 0                      # appended - (processed+abandoned+dups)
+    tick_error_log: list = field(default_factory=list)
+                                       # last ≤16 [t, repr(exc)] tick failures
+    member_ledger: list = field(default_factory=list)
+                                       # federated runs: per-member report
+                                       # cards (placement, breaker, cost)
 
     def record(self) -> dict:
         e = self.experiment
@@ -409,11 +422,17 @@ def run_adaptation(exp: AdaptationExperiment,
     initial = static_n if exp.scaling_policy == "static" else exp.initial_partitions
     initial = max(1, min(initial, exp.max_partitions))
 
+    attrs = dict(exp.backend_attrs)
+    if exp.machine == "federated":
+        if not exp.federation:
+            raise ValueError("machine='federated' needs a federation spec "
+                             "(AdaptationExperiment.federation)")
+        attrs["federation"] = exp.federation
     pcs = PilotComputeService(seed=exp.seed)
     pilot = pcs.submit_pilot(PilotDescription(
         resource=exp.resource_url, memory_mb=exp.memory_mb,
         partitions=initial, concurrency=initial,
-        attrs=dict(exp.backend_attrs)))
+        attrs=attrs))
     backend = pilot.backend
     sim = backend.sim
 
@@ -452,9 +471,11 @@ def run_adaptation(exp: AdaptationExperiment,
 
     workload = Workload(profile_for=profile_for, name="kmeans-adapt")
 
-    if exp.machine == "serverless":
+    if exp.machine in ("serverless", "federated"):
         # shard ceiling pre-provisioned: Kinesis resharding moves routing,
-        # idle shards cost nothing in the ingest model
+        # idle shards cost nothing in the ingest model.  A federation
+        # fronts its members with the same partitioned ingest — member
+        # choice is a routing decision behind the broker, not an ingest one
         ingest = PartitionIngest(sim, exp.max_partitions, bw_per_partition=1e6)
     else:
         ingest = SharedFsIngest(sim, backend.shared_resource(pilot, "fs"))
@@ -517,6 +538,9 @@ def run_adaptation(exp: AdaptationExperiment,
         wall_virtual_s=sim.now,
         des_events=sim.events_processed,
         refits=loop.refit_events,
+        tick_error_log=[[t, r] for t, r in loop.tick_error_log],
+        member_ledger=(backend.member_ledger(pilot)
+                       if hasattr(backend, "member_ledger") else []),
         **_fault_fields(engine, broker, topic, injector, loop),
     )
     pcs.close()
@@ -696,6 +720,7 @@ def _run_adaptation_threaded(exp: AdaptationExperiment,
         wall_virtual_s=end_rel,
         des_events=0,
         refits=loop.refit_events,
+        tick_error_log=[[t - t0, r] for t, r in loop.tick_error_log],
         **_fault_fields(engine, broker, topic, injector, loop),
     )
     pcs.close()

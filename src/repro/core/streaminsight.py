@@ -90,7 +90,7 @@ __all__ = ["ExperimentDesign", "AdaptationDesign", "ScenarioModel",
            "StreamInsight", "ResultCache", "run_cells", "estimated_cost",
            "PARALLEL_COST_THRESHOLD"]
 
-_CACHE_VERSION = 4     # v4: fault-injection / at-least-once delivery fields
+_CACHE_VERSION = 5     # v5: federation (member ledger) + tick-error ring
 
 
 @dataclass
@@ -223,7 +223,8 @@ _ADAPT_RESULT_FIELDS = ("run_id", "slo_violations", "ticks", "cost_integral",
                         "final_allocation", "drained", "drain_s",
                         "wall_virtual_s", "des_events", "refits",
                         "abandoned", "dup_delivered", "faults_injected",
-                        "preemptions", "fault_windows", "lost")
+                        "preemptions", "fault_windows", "lost",
+                        "tick_error_log", "member_ledger")
 
 # cell-type registry: run_cells / ResultCache dispatch on the experiment
 # dataclass, so characterization and adaptation cells share the runner,

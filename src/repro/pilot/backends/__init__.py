@@ -6,11 +6,13 @@
 # jax import it never used).  The simulation backends import eagerly; the
 # "jax" scheme resolves to a factory that imports jaxmesh on first use.
 from repro.pilot.api import register_backend
+from repro.pilot.backends.federated import FederatedBackend
 from repro.pilot.backends.hpcsim import HpcSimBackend
 from repro.pilot.backends.local import LocalBackend
 from repro.pilot.backends.serverless import ServerlessSimBackend
 
-__all__ = ["LocalBackend", "ServerlessSimBackend", "HpcSimBackend", "JaxMeshBackend"]
+__all__ = ["LocalBackend", "ServerlessSimBackend", "HpcSimBackend",
+           "FederatedBackend", "JaxMeshBackend"]
 
 
 def _jaxmesh_factory(**kwargs):

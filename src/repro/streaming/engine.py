@@ -62,6 +62,7 @@ import itertools
 import statistics
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -115,7 +116,8 @@ class _EngineCore:
                  metrics: MetricRegistry, run_id: str, group: str = "engine",
                  batch_max: int = 8, max_retries: int = 2,
                  retry_backoff_s: float = 0.0,
-                 retry_backoff_cap_s: float = 30.0, rng=None) -> None:
+                 retry_backoff_cap_s: float = 30.0, rng=None,
+                 seed: int = 0) -> None:
         self.broker = broker
         self.topic = topic
         self.pilot = pilot
@@ -127,7 +129,11 @@ class _EngineCore:
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self.retry_backoff_cap_s = retry_backoff_cap_s
-        self._retry_rng = rng          # seeded Generator for backoff jitter
+        # seeded Generator for backoff jitter; with no explicit rng the
+        # stream derives from the experiment seed (never unseeded, never
+        # jitter-free) so faulted reruns stay bit-identical by default
+        self._retry_rng = rng if rng is not None \
+            else np.random.default_rng([0x5EED, seed])
         self.n_partitions = broker.num_partitions(topic)
         self.parts = [_PartitionState() for _ in range(self.n_partitions)]
         self.completed_runtimes: list[float] = []
@@ -202,10 +208,8 @@ class _EngineCore:
         if base <= 0.0:
             return 0.0
         delay = base * (2.0 ** (attempt - 1))
-        rng = self._retry_rng
-        if rng is not None:
-            with self.counter_lock:    # one rng, many consumer threads
-                delay *= 0.5 + rng.random()
+        with self.counter_lock:        # one rng, many consumer threads
+            delay *= 0.5 + self._retry_rng.random()
         return min(delay, self.retry_backoff_cap_s)
 
     @property
@@ -472,6 +476,10 @@ class _WallTicker(threading.Thread):
         self._seq = itertools.count()
         self._stopped = False
         self.last_error: BaseException | None = None
+        # bounded history of callback errors, oldest dropped first; the
+        # control loop drains this into its tick_error_log ring (deque
+        # append/popleft are atomic, so no extra lock is needed)
+        self.errors: deque = deque(maxlen=16)
 
     def call_later(self, delay_s: float, fn: Callable[[], None]) -> None:
         with self._cv:
@@ -502,6 +510,7 @@ class _WallTicker(threading.Thread):
             except Exception as exc:  # noqa: BLE001 — keep ticking
                 if self.last_error is None:   # keep the root cause
                     self.last_error = exc
+                self.errors.append(exc)
 
 
 class ThreadedStreamingEngine:
@@ -589,6 +598,22 @@ class ThreadedStreamingEngine:
         ``run_adaptation(engine="threaded")`` raises on it — otherwise a
         crashed controller looks like a quiet, successful experiment."""
         return self._ticker.last_error if self._ticker is not None else None
+
+    def drain_ticker_errors(self) -> list:
+        """Pop-and-return every callback error seen since the last drain
+        (bounded: the ticker keeps at most 16).  The control loop feeds
+        these into its ``tick_error_log`` ring so a *flapping* policy is
+        diagnosable, not just countable — ``ticker_error`` keeps only the
+        root cause."""
+        ticker = self._ticker
+        if ticker is None:
+            return []
+        out = []
+        while True:
+            try:
+                out.append(ticker.errors.popleft())
+            except IndexError:
+                return out
 
     def repartition(self, migration_s: float = 0.0) -> None:
         """Adopt the broker's current partition count mid-run.

@@ -52,7 +52,8 @@ import numpy as np
 
 __all__ = ["FaultEvent", "FaultPlan", "FaultInjector", "FAULT_KINDS"]
 
-FAULT_KINDS = ("crash", "stall", "duplicate", "preempt")
+FAULT_KINDS = ("crash", "stall", "duplicate", "preempt",
+               "backend_outage", "grant_starvation")
 
 
 @dataclass(frozen=True, slots=True)
@@ -60,8 +61,10 @@ class FaultEvent:
     """One scheduled fault.
 
     ``target`` is a partition index for stall/duplicate (``None`` → the
-    injector picks round-robin over active partitions); ``duration_s`` is
-    the stall length; ``count`` the multiplicity for crash/preempt.
+    injector picks round-robin over active partitions) and a federation
+    member index for backend_outage/grant_starvation; ``duration_s`` is
+    the stall/outage/starvation length; ``count`` the multiplicity for
+    crash/preempt.
     """
 
     t: float
@@ -79,6 +82,16 @@ class FaultEvent:
                    target=spec.get("target"),
                    duration_s=float(spec.get("duration_s", 5.0)),
                    count=int(spec.get("count", 1)))
+
+    def to_spec(self) -> dict:
+        """Inverse of ``from_spec``: a JSON-able dict that round-trips
+        losslessly (``FaultEvent.from_spec(e.to_spec()) == e``), so fault
+        scenarios serialize into cache keys and fig8 cell descriptions."""
+        spec: dict = dict(t=self.t, kind=self.kind,
+                          duration_s=self.duration_s, count=self.count)
+        if self.target is not None:
+            spec["target"] = self.target
+        return spec
 
 
 @dataclass
@@ -115,6 +128,17 @@ class FaultPlan:
             preempt_count=int(spec.get("preempt_count", 1)),
             events=[FaultEvent.from_spec(e) for e in spec.get("events", ())],
         )
+
+    def to_spec(self) -> dict:
+        """Inverse of ``from_spec``: a JSON-able spec dict such that
+        ``FaultPlan.from_spec(plan.to_spec()) == plan``."""
+        return dict(seed=self.seed, horizon_s=self.horizon_s,
+                    crash_rate_hz=self.crash_rate_hz,
+                    duplicate_rate_hz=self.duplicate_rate_hz,
+                    stall_rate_hz=self.stall_rate_hz, stall_s=self.stall_s,
+                    preempt_times=list(self.preempt_times),
+                    preempt_count=self.preempt_count,
+                    events=[e.to_spec() for e in self.events])
 
     def _poisson_times(self, rng: np.random.Generator, rate_hz: float,
                        horizon: float) -> list[float]:
@@ -179,6 +203,8 @@ class FaultInjector:
         self.preemptions = 0
         self.stalls = 0
         self.dup_injected = 0
+        self.outages = 0          # backend_outage events that acted
+        self.starvations = 0      # grant_starvation events that acted
         self.skipped = 0          # events that found nothing to act on
         self._rr = 0              # deterministic round-robin target pick
         self._fired_since_probe = 0
@@ -230,6 +256,20 @@ class FaultInjector:
             acted = 1
         elif ev.kind == "duplicate":
             acted = self._inject_duplicate(ev)
+        elif ev.kind == "backend_outage":
+            # federation-level fault: only backends exposing the hook (the
+            # federated backend) can act; everything else skips gracefully
+            fn = getattr(self.pilot.backend, "inject_outage", None)
+            if fn is not None:
+                acted = fn(self.pilot, member=ev.target,
+                           duration_s=ev.duration_s)
+                self.outages += 1 if acted else 0
+        elif ev.kind == "grant_starvation":
+            fn = getattr(self.pilot.backend, "inject_grant_starvation", None)
+            if fn is not None:
+                acted = fn(self.pilot, member=ev.target,
+                           duration_s=ev.duration_s)
+                self.starvations += 1 if acted else 0
         if not acted:
             self.skipped += 1
         if self.metrics is not None and self.run_id is not None:

@@ -13,13 +13,17 @@ What must hold:
   unconfigured — the fig8 calibration path is bit-preserved.
 """
 
+import json
 import math
 import statistics
 
 import pytest
 
+from repro.core.metrics import MetricRegistry, new_run_id
 from repro.core.miniapp import AdaptationExperiment, run_adaptation
 from repro.pilot.api import PilotComputeService, PilotDescription
+from repro.streaming.broker import Broker
+from repro.streaming.engine import Workload, _EngineCore
 from repro.streaming.faults import FAULT_KINDS, FaultEvent, FaultPlan
 
 FAULT_SPEC = dict(crash_rate_hz=0.08, duplicate_rate_hz=0.05,
@@ -184,3 +188,56 @@ def test_degenerate_quantiles_fall_back_to_p50():
         assert {pilot.backend._queue_wait(st) for _ in range(8)} == {5.0}
     finally:
         pcs.close()
+
+
+# -- spec round-trips ---------------------------------------------------------
+
+def test_event_to_spec_roundtrips_every_kind():
+    """to_spec is the lossless inverse of from_spec for every kind —
+    including the federation-level backend_outage / grant_starvation."""
+    for kind in FAULT_KINDS:
+        for target in (None, 1):
+            ev = FaultEvent(t=3.5, kind=kind, target=target,
+                            duration_s=7.5, count=2)
+            assert FaultEvent.from_spec(ev.to_spec()) == ev
+    # an unset target stays unset, not null-with-a-key
+    assert "target" not in FaultEvent(t=1.0, kind="crash").to_spec()
+
+
+def test_plan_to_spec_roundtrips_and_is_jsonable():
+    plan = FaultPlan.from_spec(
+        dict(FAULT_SPEC, seed=7, events=[
+            dict(t=30.0, kind="backend_outage", target=1, duration_s=15.0),
+            dict(t=50.0, kind="grant_starvation", target=0),
+        ]), default_horizon_s=90.0)
+    spec = plan.to_spec()
+    json.dumps(spec)                                   # JSON-able, no repr leaks
+    clone = FaultPlan.from_spec(spec)
+    assert clone == plan                               # lossless round-trip
+    assert clone.events_for() == plan.events_for()     # same expanded schedule
+
+
+# -- seeded retry jitter ------------------------------------------------------
+
+def _bare_core(seed: int) -> _EngineCore:
+    broker = Broker()
+    broker.create_topic("t", 1)
+    return _EngineCore(broker, "t", None, Workload(name="rng"),
+                       MetricRegistry(), new_run_id("rng"),
+                       retry_backoff_s=0.1, seed=seed)
+
+
+def test_retry_jitter_defaults_to_seed_derived_stream():
+    """With no explicit rng the backoff jitter stream derives from the
+    experiment seed: reruns of a faulted, retrying experiment are
+    bit-identical by default (never unseeded, never jitter-free)."""
+    def seq(seed: int) -> list[float]:
+        core = _bare_core(seed)
+        return [core.retry_delay(a) for a in range(1, 9)]
+
+    a = seq(5)
+    assert a == seq(5)                                 # same seed, same delays
+    assert a != seq(6)                                 # the seed matters
+    for attempt, d in enumerate(a, start=1):
+        nominal = 0.1 * 2.0 ** (attempt - 1)
+        assert 0.5 * nominal <= d <= min(1.5 * nominal, 30.0)

@@ -1,0 +1,476 @@
+"""Federated multi-backend: membership, cost-aware placement, the circuit
+breaker, drain-and-migrate failover and the control loop's tick-error ring.
+
+What must hold:
+
+* Federation specs are validated loudly (missing members, unknown knobs,
+  nesting) and the greedy split is a pure function of the clock + member
+  state: same state, same split; equal-price members spread.
+* A full member outage mid-run is a degradation, not a failure: the
+  survivors absorb the failed member's partitions, ``lost == 0``, the run
+  is bit-identical under its seed, and the breaker walks open ->
+  half_open -> closed once the member recovers (re-admission is visible in
+  the member ledger).
+* Fault-poisoned estimator windows contribute ZERO samples
+  (``dirty_windows`` counts them, ``dirty_samples`` stays 0).
+* Failover re-subscription keeps the broker contract: sealed partitions
+  drain, commits are monotone per partition, on the sim engine (federated
+  members) and on the threaded engine (local backend, consumers torn down
+  by crash + shrink) alike.
+* ``ControlLoop.tick_error_log`` is a bounded ring of the last 16
+  ``(sim_ts, repr(exc))`` — a flapping controller is diagnosable from the
+  report card.
+"""
+
+from collections import defaultdict
+from types import SimpleNamespace
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hyp_st
+
+from repro.core.autoscale import ControlLoop, StaticPolicy
+from repro.core.metrics import MetricRegistry, new_run_id
+from repro.core.miniapp import AdaptationExperiment, run_adaptation
+from repro.pilot.api import (PilotComputeService, PilotDescription,
+                             TaskProfile)
+from repro.streaming.broker import Broker
+from repro.streaming.engine import SimStreamingEngine, Workload
+
+MEMBERS = [
+    dict(name="aws", machine="serverless", price=1.0,
+         usl=(0.05, 1e-3, 2.0)),
+    dict(name="wrangler", machine="wrangler", price=0.6,
+         usl=(0.1, 5e-4, 1.9), grant_latency_s=10.0),
+]
+
+
+def _members():
+    return [dict(m) for m in MEMBERS]
+
+
+def _fed_cell(**kw) -> AdaptationExperiment:
+    kw.setdefault("federation", dict(members=_members()))
+    kw.setdefault("machine", "federated")
+    return AdaptationExperiment(
+        scaling_policy="usl", policy="update_locked",
+        usl_sigma=0.05, usl_kappa=1e-3, usl_gamma=2.0,
+        rate=dict(kind="step", base_hz=2.0, high_hz=8.0, t_step=20.0),
+        horizon_s=90.0, control_interval_s=2.0, initial_partitions=2,
+        max_partitions=8, points=2000, centroids=256, seed=0,
+        max_retries=5, retry_backoff_s=0.1, **kw)
+
+
+OUTAGE = dict(events=[dict(t=30.0, kind="backend_outage", target=1,
+                           duration_s=15.0)])
+
+
+def _fingerprint(res) -> tuple:
+    return (res.processed, res.produced, res.abandoned, res.dup_delivered,
+            res.faults_injected, res.preemptions, res.lost,
+            res.slo_violations, round(res.cost_integral, 9),
+            tuple(map(tuple, res.alloc_trace)),
+            tuple(tuple(sorted(m.items())) for m in res.member_ledger))
+
+
+# -- membership / spec validation ---------------------------------------------
+
+def _fed_pilot(pcs, partitions=4, members=None, **fed_kw):
+    return pcs.submit_pilot(PilotDescription(
+        resource="federated://mix", partitions=partitions,
+        concurrency=partitions,
+        attrs=dict(federation=dict(members=members or _members(), **fed_kw))))
+
+
+def test_federation_requires_members():
+    pcs = PilotComputeService(seed=0)
+    try:
+        with pytest.raises(ValueError, match="members"):
+            pcs.submit_pilot(PilotDescription(resource="federated://mix"))
+    finally:
+        pcs.close()
+
+
+def test_unknown_federation_knob_rejected():
+    pcs = PilotComputeService(seed=0)
+    try:
+        with pytest.raises(ValueError, match="unknown federation keys"):
+            _fed_pilot(pcs, open_cooldwn_s=5.0)        # typo'd knob
+    finally:
+        pcs.close()
+
+
+def test_nested_federation_rejected():
+    pcs = PilotComputeService(seed=0)
+    try:
+        with pytest.raises(ValueError, match="do not nest"):
+            _fed_pilot(pcs, members=[dict(resource="federated://mix")])
+    finally:
+        pcs.close()
+
+
+def test_split_is_deterministic_and_spreads():
+    """Equal-price, equal-prior members share the target evenly, and the
+    split is a pure function of member state (identical across reads)."""
+    pcs = PilotComputeService(seed=0)
+    try:
+        twins = [dict(machine="serverless", name="a"),
+                 dict(machine="serverless", name="b")]
+        pilot = _fed_pilot(pcs, partitions=4, members=twins)
+        backend = pilot.backend
+        assert backend.scale_to(pilot, 8) == 8
+        units = [m["units"] for m in backend.member_ledger(pilot)]
+        assert sorted(units) == [4, 4]
+        assert backend.scale_to(pilot, 8) == 8         # idempotent re-split
+        assert [m["units"] for m in backend.member_ledger(pilot)] == units
+        assert backend.allocation(pilot) == 8
+    finally:
+        pcs.close()
+
+
+def test_cheaper_member_wins_placement():
+    """With one member priced below the other (similar capacity priors),
+    the greedy score concentrates units on the cheap one."""
+    pcs = PilotComputeService(seed=0)
+    try:
+        pilot = _fed_pilot(pcs, partitions=2, members=[
+            dict(machine="serverless", name="dear", price=1.0),
+            dict(machine="serverless", name="cheap", price=0.5)])
+        backend = pilot.backend
+        backend.scale_to(pilot, 6)
+        ledger = {m["name"]: m for m in backend.member_ledger(pilot)}
+        assert ledger["cheap"]["units"] > ledger["dear"]["units"]
+    finally:
+        pcs.close()
+
+
+def test_member_ledger_shape_and_states():
+    pcs = PilotComputeService(seed=0)
+    try:
+        pilot = _fed_pilot(pcs)
+        ledger = pilot.backend.member_ledger(pilot)
+        assert [m["name"] for m in ledger] == ["aws", "wrangler"]
+        for m in ledger:
+            assert m["state"] == "closed" and m["opens"] == 0
+            assert m["dirty_samples"] == 0
+            assert {"price", "units", "submitted", "completed", "failures",
+                    "err_ewma", "glat_ewma", "cost_integral", "est_samples",
+                    "dirty_windows", "refits"} <= set(m)
+    finally:
+        pcs.close()
+
+
+# -- failover: outage, at-least-once, determinism, re-admission ---------------
+
+@pytest.mark.parametrize("target", [0, 1])
+def test_member_outage_is_lossless_and_readmitted(target):
+    """A full member outage mid-run: survivors absorb its partitions
+    (lost == 0), the breaker opens and then re-admits the member (final
+    state closed), and fault-dirtied estimator windows contribute zero
+    samples."""
+    faults = dict(events=[dict(t=30.0, kind="backend_outage",
+                               target=target, duration_s=15.0)])
+    res = run_adaptation(_fed_cell(faults=faults))
+    assert res.drained and res.lost == 0
+    assert res.abandoned == 0
+    ledger = res.member_ledger
+    assert len(ledger) == 2
+    assert ledger[target]["opens"] >= 1                # breaker tripped
+    assert ledger[target]["state"] == "closed"         # ... and re-admitted
+    assert ledger[target]["dirty_windows"] > 0
+    assert all(m["dirty_samples"] == 0 for m in ledger)
+    survivor = ledger[1 - target]
+    assert survivor["completed"] > 0                   # absorbed the work
+
+
+def test_outage_run_is_bit_identical():
+    a = run_adaptation(_fed_cell(faults=OUTAGE))
+    b = run_adaptation(_fed_cell(faults=OUTAGE))
+    assert _fingerprint(a) == _fingerprint(b)
+    assert a.tick_error_log == [] == b.tick_error_log  # no silent crashes
+
+
+def test_fault_free_federated_run_feeds_estimators():
+    res = run_adaptation(_fed_cell())
+    assert res.drained and res.lost == 0
+    assert res.faults_injected == 0
+    assert sum(m["est_samples"] for m in res.member_ledger) > 0
+    assert all(m["opens"] == 0 for m in res.member_ledger)
+    assert res.cost_integral > 0.0
+
+
+def test_grant_starvation_steers_the_burst():
+    """Starving the HPC member of grants through the load step makes the
+    scale-up land on the serverless member."""
+    faults = dict(events=[dict(t=15.0, kind="grant_starvation", target=1,
+                               duration_s=60.0)])
+    res = run_adaptation(_fed_cell(faults=faults))
+    assert res.drained and res.lost == 0
+    ledger = {m["name"]: m for m in res.member_ledger}
+    assert ledger["aws"]["units"] > ledger["wrangler"]["units"]
+    assert ledger["wrangler"]["dirty_windows"] > 0
+
+
+def test_outage_event_skips_on_backend_without_the_hook():
+    """backend_outage against a plain (non-federated) backend is a no-op
+    skip, never a crash — fault plans stay portable across machines."""
+    res = run_adaptation(_fed_cell(
+        machine="serverless", federation=None, faults=OUTAGE))
+    assert res.drained and res.lost == 0
+    assert res.faults_injected == 1                    # fired...
+    assert res.preemptions == 0                        # ... but acted on
+    assert res.member_ledger == []                     # nothing, gracefully
+
+
+def test_worker_faults_fan_out_across_members():
+    pcs = PilotComputeService(seed=0)
+    try:
+        pilot = _fed_pilot(pcs)
+        backend = pilot.backend
+        backend.scale_to(pilot, 4)
+        backend.drive_until(
+            lambda: backend.effective_allocation(pilot) >= 4, timeout=300.0)
+        assert backend.preempt(pilot, 2) == 2
+        assert backend.effective_allocation(pilot) < 4
+    finally:
+        pcs.close()
+
+
+# -- failover re-subscription: seal semantics + monotone acks -----------------
+
+class _FedHarness:
+    """A federated pilot driving the sim engine directly, with every
+    broker commit recorded so ack monotonicity is assertable."""
+
+    def __init__(self, partitions=4, members=None, batch_max=2,
+                 max_retries=5):
+        self.pcs = PilotComputeService(seed=0)
+        self.pilot = _fed_pilot(self.pcs, partitions=partitions,
+                                members=members)
+        self.backend = self.pilot.backend
+        self.broker = Broker()
+        self.topic = "t"
+        self.broker.create_topic(self.topic, partitions)
+        self.commits = defaultdict(list)
+        inner = self.broker.commit
+
+        def recording_commit(group, topic, partition, offset):
+            self.commits[partition].append(offset)
+            inner(group, topic, partition, offset)
+
+        self.broker.commit = recording_commit
+        self.metrics = MetricRegistry()
+        self.run_id = new_run_id("fed-conform")
+        self.produced = 0
+        self._input_done = False
+        profile = TaskProfile(flops=1e7)
+        self.engine = SimStreamingEngine(
+            self.backend.sim, self.broker, self.topic, self.pilot,
+            Workload(profile_for=lambda msgs: profile, name="fed-conform"),
+            self.metrics, self.run_id, batch_max=batch_max,
+            max_retries=max_retries,
+            is_input_complete=lambda: self._input_done)
+        self.engine.start()
+
+    def produce(self, values, partition=None):
+        for v in values:
+            self.broker.append(self.topic, v, ts=self.engine.now(),
+                               partition=partition, run_id=self.run_id)
+            self.produced += 1
+
+    def finish(self):
+        self._input_done = True
+        self.engine.run_to_completion()
+
+    def assert_acks_monotone_and_sealed_drained(self):
+        core = self.engine.core
+        assert core.processed + core.abandoned == self.produced
+        for p, end in enumerate(self.broker.end_offsets(self.topic)):
+            assert self.broker.committed("engine", self.topic, p) == end
+        for p, seq in self.commits.items():
+            assert seq == sorted(seq), f"partition {p} acks rolled back"
+
+    def close(self):
+        self.pcs.close()
+
+
+def test_sim_failover_resubscription_monotone_acks():
+    """Mid-batch outage of the member owning half the partitions, then a
+    shrink: the survivor re-adopts the failed member's partitions, sealed
+    partitions drain, and no partition's committed offset ever rolls
+    back."""
+    twins = [dict(machine="serverless", name="a"),
+             dict(machine="serverless", name="b")]
+    h = _FedHarness(partitions=4, members=twins)
+    try:
+        for p in range(4):
+            h.produce(range(8), partition=p)
+        # run a slice so batches are genuinely in flight on both members
+        h.backend.sim.run_until(t=h.backend.sim.now + 0.5)
+        assert h.backend.inject_outage(h.pilot, member=0,
+                                       duration_s=5.0) >= 1
+        # control-plane shrink while member 0 is dark: Kinesis reshard
+        # seals the tail, survivors own the active prefix
+        h.broker.repartition(h.topic, 2)
+        h.engine.repartition()
+        h.produce(range(6))                  # keyless -> active prefix only
+        h.finish()
+        h.assert_acks_monotone_and_sealed_drained()
+        assert h.engine.core.processed == h.produced   # nothing abandoned
+        ledger = h.backend.member_ledger(h.pilot)
+        assert ledger[0]["opens"] >= 1                 # breaker saw the outage
+        assert ledger[1]["completed"] > 0              # survivor absorbed
+    finally:
+        h.close()
+
+
+@settings(max_examples=8, deadline=None)
+@given(member=hyp_st.integers(min_value=0, max_value=1),
+       run_s=hyp_st.floats(min_value=0.1, max_value=2.0),
+       shrink_to=hyp_st.integers(min_value=1, max_value=4))
+def test_failover_resubscription_property(member, run_s, shrink_to):
+    """Whatever member dies, whenever, and wherever the shrink lands:
+    every message settles, commits reach the end offsets and acks stay
+    monotone."""
+    twins = [dict(machine="serverless", name="a"),
+             dict(machine="serverless", name="b")]
+    h = _FedHarness(partitions=4, members=twins)
+    try:
+        for p in range(4):
+            h.produce(range(6), partition=p)
+        h.backend.sim.run_until(t=h.backend.sim.now + run_s)
+        h.backend.inject_outage(h.pilot, member=member, duration_s=3.0)
+        h.broker.repartition(h.topic, shrink_to)
+        h.engine.repartition()
+        h.produce(range(4))
+        h.finish()
+        h.assert_acks_monotone_and_sealed_drained()
+        assert h.engine.core.processed == h.produced
+    finally:
+        h.close()
+
+
+# -- threaded engine: teardown + re-adoption under the wall clock -------------
+
+def test_threaded_teardown_and_readoption_monotone_acks():
+    """The wall-clock twin of the failover path: consumers torn down by a
+    worker crash while a shrink seals half the partitions — the survivors
+    re-adopt, sealed backlogs drain, acks stay monotone."""
+    from repro.streaming.engine import ThreadedStreamingEngine
+
+    pcs = PilotComputeService(seed=0)
+    broker = Broker()
+    topic = "t"
+    broker.create_topic(topic, 4)
+    commits = defaultdict(list)
+    inner = broker.commit
+
+    def recording_commit(group, tpc, partition, offset):
+        commits[partition].append(offset)
+        inner(group, tpc, partition, offset)
+
+    broker.commit = recording_commit
+    metrics = MetricRegistry()
+    run_id = new_run_id("fed-threaded")
+    pilot = pcs.submit_pilot(PilotDescription(resource="local://",
+                                              concurrency=8))
+    profile = TaskProfile(flops=1e7)
+    engine = ThreadedStreamingEngine(
+        broker, topic, pilot,
+        Workload(profile_for=lambda msgs: profile, fn=lambda msgs: None,
+                 name="fed-threaded"),
+        metrics, run_id, batch_max=2, max_retries=3, poll_interval=0.005)
+    engine.start()
+    produced = 0
+    try:
+        assert pilot.backend.inject_crash(pilot, 1) == 1
+        for p in range(4):
+            for v in range(6):
+                broker.append(topic, v, ts=engine.now(), partition=p,
+                              run_id=run_id)
+                produced += 1
+        broker.repartition(topic, 2)                   # seal the tail
+        engine.repartition()
+        for v in range(4):                             # active prefix only
+            broker.append(topic, v, ts=engine.now(), run_id=run_id)
+            produced += 1
+        engine.drain(produced, timeout=30.0)
+        core = engine.core
+        assert core.processed == produced and core.abandoned == 0
+        assert core.retried >= 1                       # the crash cost a retry
+        for p, end in enumerate(broker.end_offsets(topic)):
+            assert broker.committed("engine", topic, p) == end
+        for p, seq in commits.items():
+            assert seq == sorted(seq), f"partition {p} acks rolled back"
+    finally:
+        engine.stop(timeout=2.0)
+        pcs.close()
+
+
+# -- the control loop's tick-error ring ---------------------------------------
+
+class _RingEngine:
+    """Minimal EngineControlSurface with a drainable ticker-error
+    history, as the threaded engine now exposes."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.errors = []
+
+    def now(self):
+        return self.t
+
+    def call_later(self, delay_s, fn):
+        pass
+
+    def repartition(self, migration_s=0.0):
+        pass
+
+    def drain_ticker_errors(self):
+        errs, self.errors = self.errors, []
+        return errs
+
+
+class _RingBackend:
+    def allocation(self, pilot):
+        return 2
+
+    def effective_allocation(self, pilot):
+        return 2
+
+    def scale_to(self, pilot, n):
+        return n
+
+
+def test_tick_error_ring_is_bounded_and_stamped():
+    eng = _RingEngine()
+    loop = ControlLoop(
+        eng, Broker(), "t", SimpleNamespace(backend=_RingBackend()),
+        StaticPolicy(2), metrics=MetricRegistry(),
+        run_id=new_run_id("ring"), interval_s=1.0)
+    for i in range(20):
+        eng.errors.append(ValueError(f"boom {i}"))
+        eng.t += 1.0
+        loop._tick()
+    assert loop.tick_errors == 20                      # total survives
+    log = list(loop.tick_error_log)
+    assert len(log) == 16                              # ring is bounded
+    assert log[0] == (5.0, "ValueError('boom 4')")     # oldest 4 evicted
+    assert log[-1] == (20.0, "ValueError('boom 19')")
+    assert all(isinstance(t, float) and isinstance(r, str) for t, r in log)
+
+
+def test_tick_error_ring_drains_in_batches():
+    """Several callback failures between two ticks all land in the ring —
+    the pre-ring latch surfaced only the first."""
+    eng = _RingEngine()
+    loop = ControlLoop(
+        eng, Broker(), "t", SimpleNamespace(backend=_RingBackend()),
+        StaticPolicy(2), metrics=MetricRegistry(),
+        run_id=new_run_id("ring"), interval_s=1.0)
+    eng.errors.extend(RuntimeError(f"e{i}") for i in range(3))
+    eng.t = 1.0
+    loop._tick()
+    assert loop.tick_errors == 3
+    assert [r for _, r in loop.tick_error_log] == \
+        ["RuntimeError('e0')", "RuntimeError('e1')", "RuntimeError('e2')"]
