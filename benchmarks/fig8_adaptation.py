@@ -11,6 +11,12 @@ simulated platforms:
    time-varying program (step, ramp, diurnal sine, Poisson-modulated bursts)
    and a ``ControlLoop`` resizes the elastic backend live.
 
+Every cell runs through the fleet what-if engine (``core.whatif``): each
+section declares a ``WhatIfDesign`` and a ``Tournament`` dedupes shared
+cells, executes each unique plan exactly once (fast replay where the cell
+qualifies, scalar DES elsewhere), and hands back summaries — the
+comparison blocks below *read* the tournament, they never re-simulate.
+
 Claims checked (the EILC value proposition):
 
 * on the **step** and **burst** traces, on both platforms, the
@@ -24,9 +30,12 @@ Claims checked (the EILC value proposition):
 * on a **drifting-cost workload** (per-message cost shifts mid-run), the
   **online-refit** predictive policy (``usl_online`` — an
   ``OnlineUSLEstimator`` re-fits the model from the loop's own
-  observations) beats the frozen-fit predictive policy on SLO-violation
-  ticks: *strictly fewer violations at strictly lower cost* on the HPC
-  platform, and *zero-vs-dozens violations at cost parity* on serverless.
+  observations) beats the frozen-fit predictive policy — stated **per seed
+  across an 8-seed grid**: never more SLO-violating ticks, a strict win on
+  the (violations, cost) order on *every* seed, strictly fewer violations
+  on the large majority, and the sweep-level exact sign test significant
+  at p < 0.05.  Per platform: *strictly lower cost on every seed* on HPC,
+  and *zero-vs-dozens violations at cost parity* on serverless.
 
 * on a **member-outage** trace (one whole backend dies for 25 s mid-run),
   the serverless+HPC **federation** is the only cell that stays
@@ -53,9 +62,11 @@ Pareto-optimal trade the monotone platform admits.
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core.miniapp import AdaptationExperiment, run_adaptation
-from repro.core.streaminsight import (AdaptationDesign, ExperimentDesign,
-                                      StreamInsight)
+from repro.core.miniapp import AdaptationSummary, run_adaptation, \
+    summarize_adaptation
+from repro.core.streaminsight import ExperimentDesign, StreamInsight
+from repro.core.whatif import Tournament, TournamentResult, WhatIfDesign, \
+    sign_test
 from repro.streaming.producer import rate_program_from_spec
 
 PARTITIONS = [1, 2, 4, 8, 12, 16]
@@ -95,7 +106,7 @@ def rate_traces(s: dict) -> list[dict]:
 DRIFT_CONTROL = dict(
     horizon_s=150.0, max_partitions=16, slo_lag=32, control_interval_s=2.0,
     stabilization_s=0.0, scale_down_hysteresis=0.08, headroom=0.0,
-    catchup_horizon_s=8.0, refit_interval_s=5.0, max_step_up=2, seed=0)
+    catchup_horizon_s=8.0, refit_interval_s=5.0, max_step_up=2)
 
 DRIFT_SCENARIOS = {
     # per-message compute x1.8 at t=40 (workload heavied): the frozen fit
@@ -118,6 +129,9 @@ DRIFT_SCENARIOS = {
 }
 
 DRIFT_COST_PARITY_X = 1.08
+# the drift claims are per-seed across this grid (the what-if engine makes
+# an 8-seed × 2-policy grid cheap: serverless cells take the fast replay)
+DRIFT_SEEDS = tuple(range(8))
 
 # fault-trace cells: the predictive-vs-reactive edge must survive failure
 # semantics — a 1%-of-messages crash rate, redeliveries at half that rate,
@@ -164,71 +178,139 @@ def fault_traces(s: dict) -> list[dict]:
     ]
 
 
-def run_fault_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
-    """usl-vs-reactive pairs under the fault plan, per trace × seed."""
+def _usl_policy(si: StreamInsight, machine: str, s: dict,
+                name: str = "usl") -> dict:
+    """Policy spec carrying this machine's characterization fit (the
+    reactive/static baselines stay model-free, as in the scalar days)."""
     sigma, kappa, gamma = si.usl_params(policy=s["policy"])[machine]
-    rows = []
-    for rate in fault_traces(s):
-        msgs = rate_program_from_spec(rate).mean_messages(0.0, FAULT_HORIZON_S)
-        crash_hz = FAULT_CRASH_FRAC * msgs / FAULT_HORIZON_S
-        for seed in FAULT_SEEDS:
-            for sp in ("usl", "reactive"):
-                exp = AdaptationExperiment(
-                    machine=machine, policy=s["policy"], scaling_policy=sp,
-                    usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma,
-                    rate=dict(rate), horizon_s=FAULT_HORIZON_S,
-                    max_partitions=16, slo_lag=FAULT_SLO_LAG, seed=seed,
-                    max_retries=FAULT_RETRIES, retry_backoff_s=FAULT_BACKOFF_S,
-                    faults=dict(seed=seed, crash_rate_hz=crash_hz,
-                                duplicate_rate_hz=crash_hz / 2.0,
-                                preempt_times=list(FAULT_PREEMPT_TIMES),
-                                preempt_count=FAULT_PREEMPT_COUNT))
-                r = run_adaptation(exp).record()
-                rows.append({
-                    "machine": machine, "scaling": sp,
-                    "rate": f"fault-{rate['kind']}", "seed": seed,
-                    "slo_violations": r["slo_violations"], "ticks": r["ticks"],
-                    "violation_frac": round(r["violation_frac"], 3),
-                    "cost_integral": round(r["cost_integral"], 1),
-                    "processed": r["processed"], "drained": r["drained"],
-                    "drain_s": round(r["drain_s"], 1),
-                    "final_n": r["final_allocation"], "refits": r["refits"],
-                    "faults_injected": r["faults_injected"],
-                    "preemptions": r["preemptions"],
-                    "dup_delivered": r["dup_delivered"],
-                    "abandoned": r["abandoned"], "lost": r["lost"],
-                    "fault_windows": r["fault_windows"],
-                    "usl_peak_n": float("nan"),
-                })
-    return rows
+    return dict(name=name, scaling_policy=name,
+                usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma)
 
 
-def run_fault_threaded_cell() -> dict:
-    """One wall-clock faulted cell: the same at-least-once ledger must close
-    exactly on the threaded engine (conformance of failure semantics on the
-    wall clock, not just the DES)."""
-    exp = AdaptationExperiment(
-        machine="serverless", scaling_policy="reactive", engine="threaded",
-        horizon_s=8.0, seed=0, threaded_service_s=0.02,
-        rate=dict(kind="step", base_hz=5.0, high_hz=15.0, t_step=4.0),
-        max_retries=FAULT_RETRIES, retry_backoff_s=0.02,
-        faults=dict(seed=0, crash_rate_hz=0.5, duplicate_rate_hz=0.25,
-                    preempt_times=[3.0], preempt_count=2))
-    r = run_adaptation(exp).record()
+def _base_row(machine: str, rate: str, summary: AdaptationSummary,
+              seed: int) -> dict:
+    r = summary.record()
     return {
-        "machine": "local-threaded", "scaling": "reactive",
-        "rate": "fault-step", "seed": 0,
+        "machine": machine, "scaling": r["scaling_policy"], "rate": rate,
+        "seed": seed,
         "slo_violations": r["slo_violations"], "ticks": r["ticks"],
         "violation_frac": round(r["violation_frac"], 3),
         "cost_integral": round(r["cost_integral"], 1),
         "processed": r["processed"], "drained": r["drained"],
         "drain_s": round(r["drain_s"], 1), "final_n": r["final_allocation"],
-        "refits": r["refits"], "faults_injected": r["faults_injected"],
-        "preemptions": r["preemptions"],
-        "dup_delivered": r["dup_delivered"], "abandoned": r["abandoned"],
-        "lost": r["lost"], "fault_windows": r["fault_windows"],
-        "usl_peak_n": float("nan"),
+        "refits": r["refits"], "usl_peak_n": float("nan"),
     }
+
+
+def _fault_row(machine: str, rate: str, summary: AdaptationSummary,
+               seed: int) -> dict:
+    r = summary.record()
+    row = _base_row(machine, rate, summary, seed)
+    row.update({
+        "faults_injected": r["faults_injected"],
+        "preemptions": r["preemptions"],
+        "dup_delivered": r["dup_delivered"],
+        "abandoned": r["abandoned"], "lost": r["lost"],
+        "fault_windows": r["fault_windows"],
+    })
+    return row
+
+
+def _tournament_note(label: str, t: TournamentResult) -> None:
+    print(f"fig8 {label}: {t.total_cells} coords -> {t.unique_cells} unique "
+          f"cells, {t.fast_cells} fast-path, "
+          f"{len(set(t.fallbacks.values()))} fallback reasons")
+
+
+def run_baseline_cells(machine: str, si: StreamInsight, s: dict,
+                       usl_peak_n: float) -> list[dict]:
+    """The 4-trace × 3-policy grid, one tournament (fast replay on
+    serverless, scalar DES on wrangler — same call)."""
+    design = WhatIfDesign(
+        base=dict(machine=machine, policy=s["policy"], horizon_s=120.0,
+                  max_partitions=16, slo_lag=32),
+        scenarios=[dict(name=r["kind"], rate=r) for r in rate_traces(s)],
+        policies=[_usl_policy(si, machine, s), "reactive", "static"],
+        seeds=[0])
+    t = Tournament(design).run()
+    _tournament_note(f"{machine} baseline", t)
+    rows = []
+    for (rate_name, _pol, seed), summary in sorted(t.summaries.items()):
+        row = _base_row(machine, rate_name, summary, seed)
+        row["usl_peak_n"] = round(usl_peak_n, 1)
+        rows.append(row)
+    return rows
+
+
+def run_drift_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
+    """Frozen-vs-online grid on the drifting-cost workload, 8 seeds per
+    policy, parameterized from this machine's own characterization fit."""
+    spec = dict(DRIFT_SCENARIOS[machine])
+    spec.pop("strict_cost")
+    cfg = dict(DRIFT_CONTROL)
+    cfg.update(spec)
+    usl = _usl_policy(si, machine, s)
+    design = WhatIfDesign(
+        base=dict(machine=machine, policy=s["policy"],
+                  usl_sigma=usl["usl_sigma"], usl_kappa=usl["usl_kappa"],
+                  usl_gamma=usl["usl_gamma"], **cfg),
+        scenarios=[dict(name="drift-step")],
+        policies=["usl", "usl_online"],
+        seeds=list(DRIFT_SEEDS))
+    t = Tournament(design).run()
+    _tournament_note(f"{machine} drift", t)
+    return [_base_row(machine, rate_name, summary, seed)
+            for (rate_name, _pol, seed), summary in sorted(t.summaries.items())]
+
+
+def run_fault_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
+    """usl-vs-reactive pairs under the fault plan, per trace × seed, as one
+    tournament (the fault plan's RNG seed tracks each cell's seed —
+    ``FaultPlan.from_spec`` defaults it to ``exp.seed``)."""
+    scenarios = []
+    for rate in fault_traces(s):
+        msgs = rate_program_from_spec(rate).mean_messages(0.0, FAULT_HORIZON_S)
+        crash_hz = FAULT_CRASH_FRAC * msgs / FAULT_HORIZON_S
+        scenarios.append(dict(
+            name=f"fault-{rate['kind']}", rate=dict(rate),
+            faults=dict(crash_rate_hz=crash_hz,
+                        duplicate_rate_hz=crash_hz / 2.0,
+                        preempt_times=list(FAULT_PREEMPT_TIMES),
+                        preempt_count=FAULT_PREEMPT_COUNT)))
+    design = WhatIfDesign(
+        base=dict(machine=machine, policy=s["policy"],
+                  horizon_s=FAULT_HORIZON_S, max_partitions=16,
+                  slo_lag=FAULT_SLO_LAG, max_retries=FAULT_RETRIES,
+                  retry_backoff_s=FAULT_BACKOFF_S),
+        scenarios=scenarios,
+        policies=[_usl_policy(si, machine, s), "reactive"],
+        seeds=list(FAULT_SEEDS))
+    t = Tournament(design).run()
+    _tournament_note(f"{machine} faults", t)
+    return [_fault_row(machine, rate_name, summary, seed)
+            for (rate_name, _pol, seed), summary in sorted(t.summaries.items())]
+
+
+def run_fault_threaded_cell() -> dict:
+    """One wall-clock faulted cell: the same at-least-once ledger must close
+    exactly on the threaded engine (conformance of failure semantics on the
+    wall clock, not just the DES).  It rides the same what-if path — and is
+    the tournament's threaded-engine fallback case."""
+    design = WhatIfDesign(
+        base=dict(machine="serverless", engine="threaded", horizon_s=8.0,
+                  threaded_service_s=0.02,
+                  rate=dict(kind="step", base_hz=5.0, high_hz=15.0,
+                            t_step=4.0),
+                  max_retries=FAULT_RETRIES, retry_backoff_s=0.02,
+                  faults=dict(crash_rate_hz=0.5, duplicate_rate_hz=0.25,
+                              preempt_times=[3.0], preempt_count=2)),
+        scenarios=[dict(name="fault-step")],
+        policies=["reactive"], seeds=[0])
+    t = Tournament(design).run()
+    assert t.fallbacks, "threaded cell unexpectedly took the fast path"
+    row = _fault_row("local-threaded", "fault-step",
+                     t.summaries[("fault-step", "reactive", 0)], 0)
+    return row
 
 
 # federation member-outage cells: a serverless+HPC federation loses one
@@ -271,96 +353,80 @@ FED_CELLS = {
 }
 
 
-def _fed_fingerprint(res) -> tuple:
-    return (res.processed, res.produced, res.abandoned, res.dup_delivered,
-            res.lost, res.slo_violations, round(res.cost_integral, 9),
-            tuple(map(tuple, res.alloc_trace)),
-            tuple(tuple(sorted(m.items())) for m in res.member_ledger))
+def _fed_fingerprint(s: AdaptationSummary) -> tuple:
+    return (s.processed, s.produced, s.abandoned, s.dup_delivered,
+            s.lost, s.slo_violations, round(s.cost_integral, 9),
+            tuple(tuple(sorted(m.items())) for m in s.member_ledger))
 
 
-def fed_cell(machines, usl_by_machine: dict, ctrl_machine: str,
-             seed: int) -> AdaptationExperiment:
-    members = [dict(name=m, machine=m,
-                    usl=tuple(usl_by_machine[m]), **FED_MEMBER_KNOBS[m])
-               for m in machines]
-    sigma, kappa, gamma = usl_by_machine[ctrl_machine]
-    return AdaptationExperiment(
-        machine="federated", policy="update_locked", scaling_policy="usl",
-        usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma,
-        federation=dict(members=members),
-        rate=dict(kind="step", base_hz=2.0, high_hz=8.0, t_step=20.0),
-        horizon_s=FED_HORIZON_S, control_interval_s=2.0,
-        initial_partitions=2, max_partitions=8, points=2000, centroids=256,
-        seed=seed, max_retries=FED_RETRIES, retry_backoff_s=FAULT_BACKOFF_S,
-        faults=dict(events=[dict(FED_OUTAGE)]))
+def fed_design(usl_by_machine: dict) -> WhatIfDesign:
+    """The three member mixes as what-if scenarios — federation specs are
+    a sweep axis like any other.  Each cell's controller runs its lead
+    member's characterization fit (the baselines are not handicapped with
+    a foreign model), so the USL prior rides the scenario, not the policy."""
+    scenarios = []
+    for label, machines in FED_CELLS.items():
+        ctrl = machines[0]
+        sigma, kappa, gamma = usl_by_machine[ctrl]
+        members = [dict(name=m, machine=m,
+                        usl=tuple(usl_by_machine[m]), **FED_MEMBER_KNOBS[m])
+                   for m in machines]
+        scenarios.append(dict(
+            name=label, machine="federated", policy="update_locked",
+            usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma,
+            federation=dict(members=members),
+            faults=dict(events=[dict(FED_OUTAGE)])))
+    return WhatIfDesign(
+        base=dict(rate=dict(kind="step", base_hz=2.0, high_hz=8.0,
+                            t_step=20.0),
+                  horizon_s=FED_HORIZON_S, control_interval_s=2.0,
+                  initial_partitions=2, max_partitions=8, points=2000,
+                  centroids=256, max_retries=FED_RETRIES,
+                  retry_backoff_s=FAULT_BACKOFF_S),
+        scenarios=scenarios, policies=["usl"], seeds=list(FED_SEEDS))
 
 
 def run_federation_cells(usl_by_machine: dict) -> list[dict]:
     print("fig8 federation: member USL priors " + ", ".join(
         f"{m}=({s:.4g}, {k:.4g}, {g:.4g})"
         for m, (s, k, g) in usl_by_machine.items()))
+    design = fed_design(usl_by_machine)
+    t = Tournament(design).run()
+    _tournament_note("federation", t)
+    # the deliberate exception to simulate-once: a fresh scalar rerun of
+    # each label's first seed, fingerprint-compared against the tournament
+    # summary — the determinism claim IS a re-simulation
+    rerun_fp = {}
+    for (label, pol, seed), plan in design.plans():
+        if seed == FED_SEEDS[0]:
+            rerun = summarize_adaptation(run_adaptation(plan.experiment),
+                                         plan=plan)
+            rerun_fp[label] = _fed_fingerprint(rerun)
     rows = []
-    for label, machines in FED_CELLS.items():
-        # each cell's controller runs its lead member's characterization
-        # fit — the baselines are not handicapped with a foreign model
-        ctrl = machines[0]
-        for seed in FED_SEEDS:
-            res = run_adaptation(fed_cell(machines, usl_by_machine,
-                                          ctrl, seed))
-            deterministic = True
-            if seed == FED_SEEDS[0]:
-                rerun = run_adaptation(fed_cell(machines, usl_by_machine,
-                                                ctrl, seed))
-                deterministic = \
-                    _fed_fingerprint(res) == _fed_fingerprint(rerun)
-            r = res.record()
-            ledger = res.member_ledger
-            outaged = ledger[FED_OUTAGE["target"] % len(ledger)]
-            rows.append({
-                "machine": label, "scaling": "usl", "rate": "outage-step",
-                "seed": seed,
-                "slo_violations": r["slo_violations"], "ticks": r["ticks"],
-                "violation_frac": round(r["violation_frac"], 3),
-                "cost_integral": round(r["cost_integral"], 1),
-                "bill": round(sum(m["cost_integral"] for m in ledger), 1),
-                "processed": r["processed"], "drained": r["drained"],
-                "drain_s": round(r["drain_s"], 1),
-                "final_n": r["final_allocation"], "refits": r["refits"],
-                "faults_injected": r["faults_injected"],
-                "abandoned": r["abandoned"], "lost": r["lost"],
-                "opens": outaged["opens"],
-                "readmitted": outaged["state"] == "closed",
-                "dirty_samples": sum(m["dirty_samples"] for m in ledger),
-                "deterministic": deterministic,
-                "usl_peak_n": float("nan"),
-            })
-    return rows
-
-
-def run_drift_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
-    """Frozen-vs-online pair on the drifting-cost workload, parameterized
-    from this machine's own characterization fit."""
-    sigma, kappa, gamma = si.usl_params(policy=s["policy"])[machine]
-    spec = dict(DRIFT_SCENARIOS[machine])
-    spec.pop("strict_cost")
-    cfg = dict(DRIFT_CONTROL)
-    cfg.update(spec)
-    rows = []
-    for sp in ("usl", "usl_online"):
-        exp = AdaptationExperiment(
-            machine=machine, policy=s["policy"], scaling_policy=sp,
-            usl_sigma=sigma, usl_kappa=kappa, usl_gamma=gamma, **cfg)
-        res = run_adaptation(exp)
-        r = res.record()
+    for (label, _pol, seed), summary in sorted(t.summaries.items()):
+        r = summary.record()
+        ledger = summary.member_ledger
+        outaged = ledger[FED_OUTAGE["target"] % len(ledger)]
+        deterministic = True
+        if seed == FED_SEEDS[0]:
+            deterministic = rerun_fp[label] == _fed_fingerprint(summary)
         rows.append({
-            "machine": machine, "scaling": r["scaling_policy"],
-            "rate": "drift-step",
+            "machine": label, "scaling": "usl", "rate": "outage-step",
+            "seed": seed,
             "slo_violations": r["slo_violations"], "ticks": r["ticks"],
             "violation_frac": round(r["violation_frac"], 3),
             "cost_integral": round(r["cost_integral"], 1),
+            "bill": round(sum(m["cost_integral"] for m in ledger), 1),
             "processed": r["processed"], "drained": r["drained"],
-            "drain_s": round(r["drain_s"], 1), "final_n": r["final_allocation"],
-            "refits": r["refits"], "usl_peak_n": float("nan"),
+            "drain_s": round(r["drain_s"], 1),
+            "final_n": r["final_allocation"], "refits": r["refits"],
+            "faults_injected": r["faults_injected"],
+            "abandoned": r["abandoned"], "lost": r["lost"],
+            "opens": outaged["opens"],
+            "readmitted": outaged["state"] == "closed",
+            "dirty_samples": sum(m["dirty_samples"] for m in ledger),
+            "deterministic": deterministic,
+            "usl_peak_n": float("nan"),
         })
     return rows
 
@@ -375,27 +441,7 @@ def run(n_messages: int = 60) -> list[dict]:
                                 n_messages=n_messages, policy=s["policy"]),
                parallel=True)
         model = si.fit_models()[0]
-        design = AdaptationDesign(
-            machines=[machine], policy=s["policy"],
-            scaling_policies=["usl", "reactive", "static"],
-            rates=rate_traces(s), horizon_s=120.0, max_partitions=16,
-            slo_lag=32)
-        for res in si.run_adaptation(design):
-            r = res.record()
-            rows.append({
-                "machine": machine, "scaling": r["scaling_policy"],
-                "rate": r["rate_kind"],
-                "slo_violations": r["slo_violations"],
-                "ticks": r["ticks"],
-                "violation_frac": round(r["violation_frac"], 3),
-                "cost_integral": round(r["cost_integral"], 1),
-                "processed": r["processed"],
-                "drained": r["drained"],
-                "drain_s": round(r["drain_s"], 1),
-                "final_n": r["final_allocation"],
-                "refits": r["refits"],
-                "usl_peak_n": round(model.fit.peak_n, 1),
-            })
+        rows.extend(run_baseline_cells(machine, si, s, model.fit.peak_n))
         usl_by_machine[machine] = si.usl_params(policy=s["policy"])[machine]
         rows.extend(run_drift_cells(machine, si, s))
         rows.extend(run_fault_cells(machine, si, s))
@@ -404,9 +450,11 @@ def run(n_messages: int = 60) -> list[dict]:
     return rows
 
 
-def by(rows: list[dict], machine: str, rate: str, scaling: str) -> dict:
+def by(rows: list[dict], machine: str, rate: str, scaling: str,
+       seed: int | None = None) -> dict:
     return next(r for r in rows if r["machine"] == machine
-                and r["rate"] == rate and r["scaling"] == scaling)
+                and r["rate"] == rate and r["scaling"] == scaling
+                and (seed is None or r["seed"] == seed))
 
 
 def main() -> None:
@@ -436,24 +484,47 @@ def main() -> None:
         print(f"fig8 {machine}: predictive saves "
               f"{100 * min(saved):.0f}-{100 * max(saved):.0f}% of static-peak "
               f"cost across {len(traces)} traces  [claims OK]")
-    # drifting-cost claims: online re-fit beats the frozen fit
+    # drifting-cost claims, per seed: the online re-fit never violates more
+    # than the frozen fit, wins the (violations, cost) order on EVERY seed,
+    # and meets the platform's cost bound; across the sweep it has strictly
+    # fewer violations on a majority of seeds and a significant sign test
     for machine in SCENARIOS:
-        frozen = by(rows, machine, "drift-step", "usl")
-        online = by(rows, machine, "drift-step", "usl_online")
-        assert online["refits"] > 0, f"online cell never re-fitted: {online}"
-        assert online["slo_violations"] < frozen["slo_violations"], \
-            f"online-refit not better than frozen on {machine}: " \
-            f"{online} vs {frozen}"
-        bound = frozen["cost_integral"] * (
-            1.0 if DRIFT_SCENARIOS[machine]["strict_cost"]
-            else DRIFT_COST_PARITY_X)
-        assert online["cost_integral"] <= bound, \
-            f"online-refit cost above bound on {machine}: {online} vs {frozen}"
+        strict_viol_wins = 0
+        for seed in DRIFT_SEEDS:
+            frozen = by(rows, machine, "drift-step", "usl", seed)
+            online = by(rows, machine, "drift-step", "usl_online", seed)
+            assert online["refits"] > 0, \
+                f"online cell never re-fitted: {online}"
+            assert online["slo_violations"] <= frozen["slo_violations"], \
+                f"online-refit violates more than frozen on {machine} " \
+                f"seed {seed}: {online} vs {frozen}"
+            bound = frozen["cost_integral"] * (
+                1.0 if DRIFT_SCENARIOS[machine]["strict_cost"]
+                else DRIFT_COST_PARITY_X)
+            assert online["cost_integral"] <= bound, \
+                f"online-refit cost above bound on {machine} seed {seed}: " \
+                f"{online} vs {frozen}"
+            assert (online["slo_violations"], online["cost_integral"]) \
+                < (frozen["slo_violations"], frozen["cost_integral"]), \
+                f"online-refit does not win the (violations, cost) order " \
+                f"on {machine} seed {seed}: {online} vs {frozen}"
+            strict_viol_wins += \
+                online["slo_violations"] < frozen["slo_violations"]
+        assert 2 * strict_viol_wins > len(DRIFT_SEEDS), \
+            f"online-refit strictly better on violations on only " \
+            f"{strict_viol_wins}/{len(DRIFT_SEEDS)} seeds on {machine}"
+        p = sign_test(len(DRIFT_SEEDS), 0)   # lex win on every seed
+        assert p < 0.05, f"drift sweep sign test not significant: p={p}"
+        frozen = by(rows, machine, "drift-step", "usl", DRIFT_SEEDS[0])
+        online = by(rows, machine, "drift-step", "usl_online", DRIFT_SEEDS[0])
         rel = online["cost_integral"] / frozen["cost_integral"]
-        print(f"fig8 {machine} drift: online-refit "
-              f"{online['slo_violations']}/{online['ticks']} violations vs "
-              f"frozen {frozen['slo_violations']}/{frozen['ticks']} at "
-              f"{rel:.2f}x cost ({online['refits']} re-fits)  [claims OK]")
+        print(f"fig8 {machine} drift: online-refit wins "
+              f"{len(DRIFT_SEEDS)}/{len(DRIFT_SEEDS)} seeds "
+              f"(strictly fewer violations on {strict_viol_wins}, sign test "
+              f"p={p:.4f}); seed 0: {online['slo_violations']}/"
+              f"{online['ticks']} vs {frozen['slo_violations']}/"
+              f"{frozen['ticks']} violations at {rel:.2f}x cost "
+              f"({online['refits']} re-fits)  [claims OK]")
     # fault-trace claims: the predictive edge survives failure semantics,
     # and the at-least-once ledger closes exactly on every faulted run
     fault_rows = [r for r in rows if r["rate"].startswith("fault-")]

@@ -64,6 +64,20 @@ The federation layer writes ``BENCH_federation.json``:
   0``, nothing abandoned), admit ZERO estimator samples from
   fault-dirtied windows, and walk the circuit breaker back to ``closed``.
 
+The what-if engine writes ``BENCH_whatif.json``:
+
+* ``whatif speedup_x`` — fig8's drift grid (8 seeds × frozen/online)
+  answered by one ``Tournament`` (shared cells deduped, vectorized fast
+  replay, summary-only returns) must run ≥10x faster than the
+  question-at-a-time loop it replaced (every comparison block
+  re-simulating its cells through the scalar DES).
+* ``whatif bit_identical`` — tournament summaries must equal serial
+  per-cell ``run_adaptation`` exactly on a 3-cell spot check.
+* ``whatif fallbacks`` — federation / stall-fault / threaded cells must
+  decline the fast path with a log-visible reason.
+* ``whatif lockstep_sim`` — the lockstep stepper's per-sim wall vs the
+  scalar DES on a qualifying static cell (informational).
+
     PYTHONPATH=src python -m benchmarks.perf_smoke
 """
 
@@ -130,7 +144,11 @@ AUTOSCALE_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_autoscale.json
 # once accounting (stable msg ids, seen-id dedup, backoff plumbing) must be
 # free on the fault-free hot path — within 5%, with the same self-retry
 # the other wall gates use against this container's ~2x CPU-share noise.
-PRE_FAULTS_WALL_S = {"serverless": 0.0086, "wrangler": 0.0094}
+# Re-baselined (PR 9) by re-measuring best-of-81 at that same commit after
+# the container's CPU share drifted (the old wrangler 0.0094 was no longer
+# reachable by ANY tree, including the commit it was measured on) — per
+# the ROADMAP caveat: move the baseline, never the 1.05x factor.
+PRE_FAULTS_WALL_S = {"serverless": 0.0089, "wrangler": 0.0116}
 FAULTFREE_WALL_X = 1.05
 # fig8's fault-cell shape, one seed: 1%-of-messages crash rate, redeliveries
 # at half that, three 3-unit preemptions; relaxed SLO (see fig8_adaptation:
@@ -157,6 +175,31 @@ FED_MEMBERS = [
          usl=(0.1, 5e-4, 1.9), grant_latency_s=10.0),
 ]
 FEDERATION_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_federation.json"
+
+# -- what-if tournament gates -------------------------------------------------
+# fig8's serverless drift grid (8 seeds × frozen/online) phrased as a
+# WhatIfDesign.  The before-side is the question-at-a-time loop fig8 ran
+# pre-tournament: every comparison block (violations, cost, refits, drain,
+# Pareto, both win-matrix entries) re-simulating each cell it reads through
+# the scalar DES.  The tournament answers the same questions from one
+# deduped pass over the unique cells on the vectorized fast replay, and
+# must be >=10x faster; summaries must match serial ``run_adaptation``
+# bit-for-bit on a 3-cell spot check.  Non-qualifying cells (federation,
+# stall faults, threaded engine) must decline the fast path with a
+# log-visible reason.  The lockstep stepper's per-sim wall vs the scalar
+# DES rides along as an informational row.
+WHATIF_SPEEDUP_GATE_X = 10.0
+WHATIF_SEEDS = tuple(range(8))
+WHATIF_DRIFT_CELL = dict(
+    machine="serverless", horizon_s=150.0, max_partitions=16, slo_lag=32,
+    control_interval_s=2.0, stabilization_s=0.0, scale_down_hysteresis=0.08,
+    headroom=0.0, catchup_horizon_s=8.0, refit_interval_s=5.0, max_step_up=2,
+    drift_t_s=40.0, drift_factor=1.8, refit_half_life_s=25.0,
+    rate=dict(kind="step", base_hz=2.0, high_hz=12.0, t_step=25.0,
+              t_end=120.0))
+WHATIF_SPOT_COORDS = [("drift", "usl", 0), ("drift", "usl_online", 0),
+                      ("drift", "usl", 5)]
+WHATIF_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_whatif.json"
 
 # -- simlint (informational) --------------------------------------------------
 # a full-repo analyzer sweep rides in the pre-commit/tier-1 path, so its
@@ -573,6 +616,133 @@ def gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
     return rows
 
 
+def _whatif_design():
+    from repro.core.whatif import WhatIfDesign
+
+    return WhatIfDesign(
+        base=dict(**WHATIF_DRIFT_CELL, **ADAPT_USL_PARAMS),
+        scenarios=[dict(name="drift")],
+        policies=["usl", "usl_online"],
+        seeds=list(WHATIF_SEEDS))
+
+
+def run_whatif() -> dict:
+    """Tournament-vs-naive on the fig8 drift grid, bit-identity spot
+    check, fast-path refusals, and the lockstep stepper's per-sim wall."""
+    from repro.core.miniapp import (AdaptationPlan, summarize_adaptation)
+    from repro.core.whatif import Tournament
+    from repro.sim.batched import (lockstep_completion_times,
+                                   lockstep_eligibility, try_fast_adaptation)
+
+    design = _whatif_design()
+    plans = dict(design.plans())
+    blocks = design.naive_question_cells()
+    naive_cells = sum(len(cs) for _name, cs in blocks)
+
+    def naive_loop():
+        for _name, cs in blocks:
+            for c in cs:
+                run_adaptation(plans[c].experiment)
+
+    def tournament():
+        # no disk cache and serial execution: the measured win is dedupe +
+        # fast replay + summary-only returns, nothing else
+        return Tournament(design, parallel=False, cache=None).run()
+
+    result = tournament()                       # warm the fast path
+    run_adaptation(plans[WHATIF_SPOT_COORDS[0]].experiment)   # warm scalar
+    ratio = -float("inf")
+    for attempt in range(1, SWEEP_ATTEMPTS + 1):
+        wall_naive_i = _best_wall(naive_loop, repeats=1)
+        wall_tour_i = _best_wall(tournament, repeats=3)
+        if wall_naive_i / max(wall_tour_i, 1e-9) > ratio:
+            wall_naive, wall_tour = wall_naive_i, wall_tour_i
+            ratio = wall_naive / max(wall_tour, 1e-9)
+        if ratio >= WHATIF_SPEEDUP_GATE_X:
+            break
+    # bit-identity spot check: tournament summaries vs serial per-cell
+    # run_adaptation (record() excludes execution telemetry, so the rows
+    # must be EXACTLY equal — the fast replay's contract)
+    spot_matches = 0
+    for coord in WHATIF_SPOT_COORDS:
+        serial = summarize_adaptation(run_adaptation(plans[coord].experiment),
+                                      plan=plans[coord])
+        spot_matches += \
+            serial.record() == result.summaries[coord].record()
+    # fast-path refusals: each non-qualifying shape must decline with a
+    # reason (try_fast_adaptation returns (None, reason) without running
+    # the scalar fallback)
+    decline_shapes = {
+        "federation": dict(machine="federated",
+                           federation=dict(members=[dict(machine="serverless")])),
+        "stall_faults": dict(faults=dict(stall_rate_hz=0.2, stall_s=5.0)),
+        "threaded": dict(engine="threaded", threaded_service_s=0.02),
+    }
+    refusals = {}
+    for label, overrides in decline_shapes.items():
+        exp = AdaptationExperiment(**{**WHATIF_DRIFT_CELL,
+                                      **ADAPT_USL_PARAMS, **overrides})
+        summary, reason = try_fast_adaptation(AdaptationPlan(experiment=exp))
+        refusals[label] = {"declined": summary is None, "reason": reason}
+    # lockstep stepper (informational): per-sim wall across the seed axis
+    # vs one scalar DES run of the same qualifying static cell
+    lock_exp = AdaptationExperiment(
+        machine="serverless", scaling_policy="static", static_partitions=1,
+        horizon_s=60.0, seed=0,
+        rate=dict(kind="step", base_hz=2.0, high_hz=4.0, t_step=30.0))
+    lock_reason = lockstep_eligibility(lock_exp)
+    lockstep_completion_times(lock_exp, list(WHATIF_SEEDS))       # warm
+    wall_lock = _best_wall(
+        lambda: lockstep_completion_times(lock_exp, list(WHATIF_SEEDS)),
+        repeats=3)
+    wall_lock_scalar = _best_wall(lambda: run_adaptation(lock_exp), repeats=3)
+    return {
+        "grid": {"seeds": len(WHATIF_SEEDS), "policies": 2,
+                 "total_coords": result.total_cells,
+                 "unique_cells": result.unique_cells,
+                 "fast_cells": result.fast_cells,
+                 "naive_cells": naive_cells,
+                 "blocks": [[name, len(cs)] for name, cs in blocks]},
+        "wall_naive_s": round(wall_naive, 3),
+        "wall_tournament_s": round(wall_tour, 3),
+        "speedup_x": round(ratio, 1),
+        "speedup_attempts": attempt,
+        "spot_checked": len(WHATIF_SPOT_COORDS),
+        "spot_matches": spot_matches,
+        "refusals": refusals,
+        "lockstep": {"eligible": lock_reason is None,
+                     "wall_batch_s": round(wall_lock, 4),
+                     "per_sim_s": round(wall_lock / len(WHATIF_SEEDS), 5),
+                     "scalar_des_s": round(wall_lock_scalar, 4)},
+    }
+
+
+def whatif_gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
+    grid = report["grid"]
+    refusals = report["refusals"]
+    lock = report["lockstep"]
+    return [
+        ("whatif", "speedup_x", f"{report['wall_naive_s']:g}s",
+         f"{report['speedup_x']:g}", f">={WHATIF_SPEEDUP_GATE_X:g}x",
+         report["speedup_x"] >= WHATIF_SPEEDUP_GATE_X),
+        ("whatif", "dedupe", str(grid["naive_cells"]),
+         str(grid["unique_cells"]), "==grid",
+         grid["unique_cells"] == grid["total_coords"] <= grid["naive_cells"]),
+        ("whatif", "fast_cells", str(grid["unique_cells"]),
+         str(grid["fast_cells"]), "==unique",
+         grid["fast_cells"] == grid["unique_cells"]),
+        ("whatif", "bit_identical", str(report["spot_checked"]),
+         str(report["spot_matches"]), "==3",
+         report["spot_matches"] == report["spot_checked"] == 3),
+        ("whatif", "fallbacks", "-",
+         f"{sum(r['declined'] and bool(r['reason']) for r in refusals.values())}"
+         f"/{len(refusals)}", "all",
+         all(r["declined"] and r["reason"] for r in refusals.values())),
+        ("whatif", "lockstep_sim", f"{lock['scalar_des_s']:g}",
+         f"{lock['per_sim_s']:g}", "info", True),
+    ]
+
+
 def run_simlint() -> dict:
     """Time one full-repo analyzer sweep (informational, never a gate:
     a slow analyzer is an annoyance, not a correctness regression)."""
@@ -608,13 +778,16 @@ def main() -> None:
     federation_report = run_federation()
     FEDERATION_OUT_PATH.write_text(
         json.dumps(federation_report, indent=2) + "\n")
+    whatif_report = run_whatif()
+    WHATIF_OUT_PATH.write_text(json.dumps(whatif_report, indent=2) + "\n")
     rows = gates(report) + usl_gates(usl_report) \
         + autoscale_gates(autoscale_report) + faults_gates(faults_report) \
-        + federation_gates(federation_report) + simlint_rows(run_simlint())
+        + federation_gates(federation_report) + whatif_gates(whatif_report) \
+        + simlint_rows(run_simlint())
     width = (12, 14, 10, 10, 8)
     print(f"perf_smoke: wrote {OUT_PATH.name}, {USL_OUT_PATH.name}, "
-          f"{AUTOSCALE_OUT_PATH.name}, {FAULTS_OUT_PATH.name} and "
-          f"{FEDERATION_OUT_PATH.name}")
+          f"{AUTOSCALE_OUT_PATH.name}, {FAULTS_OUT_PATH.name}, "
+          f"{FEDERATION_OUT_PATH.name} and {WHATIF_OUT_PATH.name}")
     print("  scope        metric         before     after      gate      result")
     failed = False
     for scope, metric, before, after, gate, ok in rows:

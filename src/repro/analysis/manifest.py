@@ -26,6 +26,17 @@ classes to ``overrides`` (or ``wall_modules``), and register every new
 stating its place in the acquisition order.  The tier-1 gate
 (``tests/test_static_analysis.py``) fails until the manifest and the code
 agree — which is the point.
+
+Worked example — the what-if engine (``core/whatif.py``): the tournament
+sits squarely on the sim path (its summaries feed the paper's adaptation
+claims), so the module went into ``sim_modules``.  It takes no locks —
+expansion/dedupe/reduction are pure, and execution delegates to
+``streaminsight.run_cells``, whose module-level pool-creation ``Lock``
+was already registered — so ``known_locks`` gained no entry; a wrapper
+that only *calls* locked machinery is not a new lock site.  Had it added
+one (say a results-accumulator lock fed from pool callbacks), the entry's
+note would state it is leaf: acquired after, never while holding, the
+pool lock.
 """
 
 from __future__ import annotations
@@ -133,6 +144,11 @@ DEFAULT_MANIFEST = Manifest(
         "*/repro/core/metrics.py",
         "*/repro/core/miniapp.py",
         "*/repro/core/streaminsight.py",
+        # the what-if tournament: pure expand/dedupe/reduce around
+        # streaminsight.run_cells — it creates no locks of its own (the
+        # module-level pool Lock below covers its execution) and its
+        # reducers (sign test, Pareto, win matrices) are seed-deterministic
+        "*/repro/core/whatif.py",
         "*/repro/pilot/api.py",
         "*/repro/pilot/backends/hpcsim.py",
         "*/repro/pilot/backends/serverless.py",

@@ -68,7 +68,8 @@ from repro.core.usl import USLFit, fit_usl_batch
 
 __all__ = ["AutoscalePolicy", "Autoscaler", "ControlObservation",
            "USLPredictivePolicy", "ReactiveLagPolicy", "StaticPolicy",
-           "ControlLoop", "OnlineUSLEstimator", "EngineControlSurface"]
+           "ControlLoop", "OnlineUSLEstimator", "EngineControlSurface",
+           "policy_from_spec"]
 
 
 @dataclass
@@ -475,6 +476,66 @@ class StaticPolicy:
 
     def decide(self, obs: ControlObservation) -> int:
         return self.partitions
+
+
+def policy_from_spec(spec: dict, *, initial: int):
+    """Construct a scaling policy from a JSON-able spec dict.
+
+    The spec is data, not code — the same dict a ``WhatIfDesign`` carries
+    through pickling into pool workers and into cache keys.  ``kind``
+    selects the controller; the remaining keys are its hyperparameters:
+
+    * ``usl`` / ``usl_online``: ``sigma``/``kappa``/``gamma`` (the fitted
+      model, required), ``headroom``, ``max_partitions``,
+      ``scale_down_hysteresis``, ``catchup_horizon_s``, ``downscale_lag``,
+      ``stabilization_s``, ``max_step_up``; online adds
+      ``refit_interval_s``, ``refit_window``, ``refit_half_life_s``.
+    * ``reactive``: ``hi_lag``, ``lo_lag``, ``step_up``, ``max_partitions``.
+    * ``static``: ``partitions`` (defaults to ``initial``).
+
+    ``initial`` seeds the planner's current allocation (the hysteresis
+    reference) — it is runtime wiring, not a hyperparameter, which is why
+    it is a keyword argument and not a spec field.
+    """
+    kind = spec.get("kind")
+    if kind in ("usl", "usl_online"):
+        try:
+            fit = USLFit(sigma=float(spec["sigma"]), kappa=float(spec["kappa"]),
+                         gamma=float(spec["gamma"]), r2=1.0, rmse=0.0, n_obs=0)
+        except KeyError as exc:
+            raise ValueError(
+                f"{kind} policy spec needs sigma/kappa/gamma "
+                "(fit a characterization sweep first)") from exc
+        scaler = Autoscaler(fit, AutoscalePolicy(
+            headroom=float(spec.get("headroom", 0.15)),
+            max_partitions=int(spec.get("max_partitions", 256)),
+            scale_down_hysteresis=float(spec.get("scale_down_hysteresis", 0.25)),
+            min_partitions=1), current=initial)
+        estimator = None
+        if kind == "usl_online":
+            estimator = OnlineUSLEstimator(
+                fit,
+                refit_interval_s=float(spec.get("refit_interval_s", 10.0)),
+                window=int(spec.get("refit_window", 128)),
+                half_life_s=float(spec.get("refit_half_life_s", 45.0)))
+        max_step_up = spec.get("max_step_up")
+        return USLPredictivePolicy(
+            scaler,
+            catchup_horizon_s=float(spec.get("catchup_horizon_s", 20.0)),
+            downscale_lag=int(spec.get("downscale_lag", 16)),
+            stabilization_s=float(spec.get("stabilization_s", 60.0)),
+            estimator=estimator,
+            max_step_up=None if max_step_up is None else int(max_step_up))
+    if kind == "reactive":
+        return ReactiveLagPolicy(
+            hi_lag=int(spec.get("hi_lag", 32)),
+            lo_lag=int(spec.get("lo_lag", 4)),
+            step_up=int(spec.get("step_up", 1)),
+            min_partitions=1,
+            max_partitions=int(spec.get("max_partitions", 256)))
+    if kind == "static":
+        return StaticPolicy(int(spec.get("partitions", initial)))
+    raise ValueError(f"unknown policy kind {kind!r} in spec {spec!r}")
 
 
 class ControlLoop:

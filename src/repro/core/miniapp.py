@@ -45,11 +45,8 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from repro.core.autoscale import (AutoscalePolicy, Autoscaler, ControlLoop,
-                                  OnlineUSLEstimator, ReactiveLagPolicy,
-                                  StaticPolicy, USLPredictivePolicy)
+from repro.core.autoscale import ControlLoop, policy_from_spec
 from repro.core.metrics import MetricRegistry, new_run_id, percentile_summary
-from repro.core.usl import USLFit
 from repro.pilot.api import (PilotComputeService, PilotDescription, State,
                              TaskProfile)
 from repro.streaming.broker import Broker
@@ -63,7 +60,9 @@ from repro.streaming.producer import (AIMD, PartitionIngest, RateProgram,
 __all__ = ["StreamExperiment", "ExperimentResult", "KMeansStreamWorkload",
            "run_experiment", "AdaptationExperiment", "AdaptationResult",
            "run_adaptation", "default_consistency", "POINT_BYTES",
-           "KMEANS_DIM"]
+           "KMEANS_DIM", "AdaptationPlan", "AdaptationSummary",
+           "scaling_policy_spec", "summarize_adaptation", "run_plan",
+           "adaptation_profile_factory"]
 
 
 def default_consistency(machine: str) -> str:
@@ -332,37 +331,207 @@ class AdaptationResult:
                     fault_windows=self.fault_windows, lost=self.lost)
 
 
-def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
-    if exp.scaling_policy in ("usl", "usl_online"):
+@dataclass
+class AdaptationPlan:
+    """One closed-loop run as *data*: the experiment plus execution flags.
+
+    A plan is picklable and JSON-able (it rides the ``run_cells`` process
+    pool and keys the ``ResultCache``), and ``run_plan`` is a pure function
+    of it — a run is a value, not a script.  ``fast=True`` lets the runner
+    take the vectorized serverless replay (``sim.batched``) when the cell
+    qualifies; the result is bit-identical either way, so ``fast`` is an
+    execution hint, not a semantic axis."""
+
+    experiment: AdaptationExperiment
+    fast: bool = True
+
+    def __post_init__(self) -> None:
+        if isinstance(self.experiment, dict):   # cache/JSON round-trip
+            self.experiment = AdaptationExperiment(**self.experiment)
+
+    def cost_estimate(self) -> float:
+        """Work estimate for the ``run_cells`` serial-vs-pool auto-switch
+        (a plan costs what its cell costs)."""
+        return self.experiment.cost_estimate()
+
+
+@dataclass
+class AdaptationSummary:
+    """Compact, trace-free report card of one adaptation cell.
+
+    Everything fig8 tables and what-if reductions consume — violations,
+    cost integral, fault ledger, refits, latency percentiles — and nothing
+    sized O(events): no alloc/lag traces, no tick-error ring, no DES event
+    counts.  This is the payload a fleet of pool workers ships back and
+    the ``ResultCache`` memoizes for what-if plans."""
+
+    experiment: AdaptationPlan
+    slo_violations: int
+    ticks: int
+    cost_integral: float
+    scale_events: int
+    produced: int
+    processed: int
+    throughput: float
+    latency_px: dict
+    final_allocation: int = 1
+    drained: bool = True
+    drain_s: float = 0.0
+    refits: int = 0
+    abandoned: int = 0
+    dup_delivered: int = 0
+    faults_injected: int = 0
+    preemptions: int = 0
+    fault_windows: int = 0
+    lost: int = 0
+    member_ledger: list = field(default_factory=list)
+    fast_path: bool = False            # vectorized replay taken?
+    fallback_reason: str | None = None  # why it was not, if ``fast`` asked
+
+    def record(self) -> dict:
+        """Flat row for tables; excludes the execution-telemetry fields
+        (``fast_path``/``fallback_reason``) so fast and scalar runs of the
+        same plan produce *identical* rows."""
+        e = self.experiment.experiment
+        return dict(machine=e.machine, scaling_policy=e.scaling_policy,
+                    engine=e.engine,
+                    rate_kind=e.rate.get("kind", "?"), horizon_s=e.horizon_s,
+                    seed=e.seed,
+                    slo_violations=self.slo_violations, ticks=self.ticks,
+                    violation_frac=self.slo_violations / max(self.ticks, 1),
+                    cost_integral=self.cost_integral,
+                    scale_events=self.scale_events, refits=self.refits,
+                    produced=self.produced, processed=self.processed,
+                    throughput=self.throughput,
+                    latency_px_p95=self.latency_px.get("p95", float("nan")),
+                    final_allocation=self.final_allocation,
+                    drained=self.drained, drain_s=self.drain_s,
+                    abandoned=self.abandoned, dup_delivered=self.dup_delivered,
+                    faults_injected=self.faults_injected,
+                    preemptions=self.preemptions,
+                    fault_windows=self.fault_windows, lost=self.lost)
+
+
+def summarize_adaptation(res: AdaptationResult, *,
+                         plan: AdaptationPlan | None = None,
+                         fast_path: bool = False,
+                         fallback_reason: str | None = None) -> AdaptationSummary:
+    """Compress a full ``AdaptationResult`` into an ``AdaptationSummary``
+    (drop the traces, keep the report card)."""
+    return AdaptationSummary(
+        experiment=plan if plan is not None
+        else AdaptationPlan(experiment=res.experiment),
+        slo_violations=res.slo_violations, ticks=res.ticks,
+        cost_integral=res.cost_integral, scale_events=res.scale_events,
+        produced=res.produced, processed=res.processed,
+        throughput=res.throughput, latency_px=dict(res.latency_px),
+        final_allocation=res.final_allocation, drained=res.drained,
+        drain_s=res.drain_s, refits=res.refits, abandoned=res.abandoned,
+        dup_delivered=res.dup_delivered, faults_injected=res.faults_injected,
+        preemptions=res.preemptions, fault_windows=res.fault_windows,
+        lost=res.lost, member_ledger=list(res.member_ledger),
+        fast_path=fast_path, fallback_reason=fallback_reason)
+
+
+def run_plan(plan: AdaptationPlan | AdaptationExperiment,
+             metrics: MetricRegistry | None = None) -> AdaptationSummary:
+    """Execute one what-if plan → summary.  Pure and picklable: same
+    signature contract as ``run_adaptation`` (so it slots into the
+    ``run_cells`` cell-type registry), but returns the compact summary.
+
+    With ``plan.fast`` set the qualifying serverless cells run on the
+    vectorized replay (``sim.batched``) — bit-identical to the scalar DES
+    by construction and tested — and every non-qualifying cell falls back
+    to ``run_adaptation`` with the reason recorded on the summary (and
+    logged by the fast path)."""
+    if isinstance(plan, AdaptationExperiment):
+        plan = AdaptationPlan(experiment=plan)
+    reason = None
+    if plan.fast:
+        from repro.sim.batched import try_fast_adaptation
+        summary, reason = try_fast_adaptation(plan)
+        if summary is not None:
+            return summary
+    res = run_adaptation(plan.experiment, metrics)
+    return summarize_adaptation(res, plan=plan, fast_path=False,
+                                fallback_reason=reason)
+
+
+def scaling_policy_spec(exp: AdaptationExperiment) -> dict:
+    """The cell's controller as a JSON-able ``policy_from_spec`` spec.
+
+    This is the declarative form a ``WhatIfDesign`` varies over (policy ×
+    hyperparameter grids) and the form cache keys / pool workers see — the
+    experiment's scattered controller knobs, gathered into one dict."""
+    sp = exp.scaling_policy
+    if sp in ("usl", "usl_online"):
         if None in (exp.usl_sigma, exp.usl_kappa, exp.usl_gamma):
             raise ValueError(
                 "usl scaling policy needs usl_sigma/usl_kappa/usl_gamma "
                 "(fit a characterization sweep first — StreamInsight.fit_models)")
-        fit = USLFit(sigma=exp.usl_sigma, kappa=exp.usl_kappa,
-                     gamma=exp.usl_gamma, r2=1.0, rmse=0.0, n_obs=0)
-        scaler = Autoscaler(fit, AutoscalePolicy(
-            headroom=exp.headroom, max_partitions=exp.max_partitions,
-            scale_down_hysteresis=exp.scale_down_hysteresis,
-            min_partitions=1), current=initial)
-        estimator = None
-        if exp.scaling_policy == "usl_online":
-            estimator = OnlineUSLEstimator(
-                fit, refit_interval_s=exp.refit_interval_s,
-                window=exp.refit_window, half_life_s=exp.refit_half_life_s)
-        return USLPredictivePolicy(scaler,
-                                   catchup_horizon_s=exp.catchup_horizon_s,
-                                   downscale_lag=max(4, exp.slo_lag // 2),
-                                   stabilization_s=exp.stabilization_s,
-                                   estimator=estimator,
-                                   max_step_up=exp.max_step_up)
-    if exp.scaling_policy == "reactive":
-        return ReactiveLagPolicy(hi_lag=exp.slo_lag,
-                                 lo_lag=max(1, exp.slo_lag // 8),
-                                 min_partitions=1,
-                                 max_partitions=exp.max_partitions)
-    if exp.scaling_policy == "static":
-        return StaticPolicy(initial)
-    raise ValueError(f"unknown scaling_policy {exp.scaling_policy!r}")
+        spec = dict(kind=sp, sigma=exp.usl_sigma, kappa=exp.usl_kappa,
+                    gamma=exp.usl_gamma, headroom=exp.headroom,
+                    max_partitions=exp.max_partitions,
+                    scale_down_hysteresis=exp.scale_down_hysteresis,
+                    catchup_horizon_s=exp.catchup_horizon_s,
+                    downscale_lag=max(4, exp.slo_lag // 2),
+                    stabilization_s=exp.stabilization_s,
+                    max_step_up=exp.max_step_up)
+        if sp == "usl_online":
+            spec.update(refit_interval_s=exp.refit_interval_s,
+                        refit_window=exp.refit_window,
+                        refit_half_life_s=exp.refit_half_life_s)
+        return spec
+    if sp == "reactive":
+        return dict(kind="reactive", hi_lag=exp.slo_lag,
+                    lo_lag=max(1, exp.slo_lag // 8),
+                    max_partitions=exp.max_partitions)
+    if sp == "static":
+        return dict(kind="static")
+    raise ValueError(f"unknown scaling_policy {sp!r}")
+
+
+def _make_scaling_policy(exp: AdaptationExperiment, initial: int):
+    return policy_from_spec(scaling_policy_spec(exp), initial=initial)
+
+
+def adaptation_profile_factory(exp: AdaptationExperiment, now_fn, alloc_fn):
+    """Per-allocation cost-profile closure shared by ``run_adaptation`` and
+    the what-if fast replay (``sim.batched``).
+
+    Coherence peers track the LIVE allocation (``alloc_fn``), so scaling up
+    genuinely buys (and pays for) more peers.  Keyed additionally on whether
+    the drift has hit (``now_fn() >= drift_t_s``): from then on the
+    per-message cost — compute AND model traffic — is multiplied by
+    ``drift_factor``, as if the shared model grew mid-run.  On serverless
+    (isolated containers) that shifts gamma; on HPC the scaled model bytes
+    also ride the shared filesystem and the coherence fan-out, so sigma AND
+    kappa drift — the true USL peak moves, and a frozen fit happily scales
+    into what is now the retrograde region.
+
+    One definition serves both execution paths so their float arithmetic
+    cannot drift apart."""
+    profiles: dict[tuple[int, bool], TaskProfile] = {}
+
+    def profile_for(msgs) -> TaskProfile:
+        n = alloc_fn()
+        drifted = exp.drift_t_s is not None and now_fn() >= exp.drift_t_s
+        prof = profiles.get((n, drifted))
+        if prof is None:
+            prof = KMeansStreamWorkload(
+                points=exp.points, centroids=exp.centroids,
+                policy=exp.effective_policy, n_partitions=n).profile()
+            if drifted and exp.drift_factor != 1.0:
+                f = exp.drift_factor
+                prof = replace(prof,
+                               flops=prof.flops * f,
+                               serial_flops=prof.serial_flops * f,
+                               read_bytes=prof.read_bytes * f,
+                               write_bytes=prof.write_bytes * f)
+            profiles[(n, drifted)] = prof
+        return prof
+
+    return profile_for
 
 
 def _build_injector(exp: AdaptationExperiment, engine, broker, topic, pilot,
@@ -440,35 +609,8 @@ def run_adaptation(exp: AdaptationExperiment,
     topic = "points"
     broker.create_topic(topic, initial)
 
-    # per-allocation cost profiles: coherence peers track the LIVE
-    # allocation, so scaling up genuinely buys (and pays for) more peers.
-    # Keyed additionally on whether the drift has hit: from drift_t_s on,
-    # the per-message cost — compute AND model traffic — is multiplied by
-    # drift_factor, as if the shared model grew mid-run.  On serverless
-    # (isolated containers) that shifts gamma; on HPC the scaled model
-    # bytes also ride the shared filesystem and the coherence fan-out, so
-    # sigma AND kappa drift — the true USL peak moves, and a frozen fit
-    # happily scales into what is now the retrograde region.
-    profiles: dict[tuple[int, bool], TaskProfile] = {}
-
-    def profile_for(msgs) -> TaskProfile:
-        n = loop.allocation
-        drifted = exp.drift_t_s is not None and sim.now >= exp.drift_t_s
-        prof = profiles.get((n, drifted))
-        if prof is None:
-            prof = KMeansStreamWorkload(
-                points=exp.points, centroids=exp.centroids,
-                policy=exp.effective_policy, n_partitions=n).profile()
-            if drifted and exp.drift_factor != 1.0:
-                f = exp.drift_factor
-                prof = replace(prof,
-                               flops=prof.flops * f,
-                               serial_flops=prof.serial_flops * f,
-                               read_bytes=prof.read_bytes * f,
-                               write_bytes=prof.write_bytes * f)
-            profiles[(n, drifted)] = prof
-        return prof
-
+    profile_for = adaptation_profile_factory(
+        exp, lambda: sim.now, lambda: loop.allocation)
     workload = Workload(profile_for=profile_for, name="kmeans-adapt")
 
     if exp.machine in ("serverless", "federated"):

@@ -80,17 +80,22 @@ from typing import Any
 import numpy as np
 
 from repro.core.metrics import MetricRegistry
-from repro.core.miniapp import (AdaptationExperiment, AdaptationResult,
+from repro.core.miniapp import (AdaptationExperiment, AdaptationPlan,
+                                AdaptationResult, AdaptationSummary,
                                 ExperimentResult, StreamExperiment,
                                 default_consistency, run_adaptation,
-                                run_experiment)
+                                run_experiment, run_plan)
 from repro.core.usl import USLFit, fit_usl_batch, fit_usl_ragged, rmse
 
 __all__ = ["ExperimentDesign", "AdaptationDesign", "ScenarioModel",
            "StreamInsight", "ResultCache", "run_cells", "estimated_cost",
-           "PARALLEL_COST_THRESHOLD"]
+           "cache_key", "CACHE_SCHEMA_VERSION", "PARALLEL_COST_THRESHOLD"]
 
-_CACHE_VERSION = 5     # v5: federation (member ledger) + tick-error ring
+# One constant, bumped once per on-disk schema change (v2: adaptation
+# cells; v3: fault ledger; v5: federation member ledger + tick-error ring;
+# v6: what-if plan summaries).  Every cache key derives from it through
+# ``cache_key`` below — bumping it invalidates the whole memo at once.
+CACHE_SCHEMA_VERSION = 6
 
 
 @dataclass
@@ -226,14 +231,27 @@ _ADAPT_RESULT_FIELDS = ("run_id", "slo_violations", "ticks", "cost_integral",
                         "preemptions", "fault_windows", "lost",
                         "tick_error_log", "member_ledger")
 
+# summary cells: everything AdaptationSummary carries except the plan
+# itself (reconstructed from the cache doc's experiment payload)
+_PLAN_SUMMARY_FIELDS = ("slo_violations", "ticks", "cost_integral",
+                        "scale_events", "produced", "processed", "throughput",
+                        "latency_px", "final_allocation", "drained",
+                        "drain_s", "refits", "abandoned", "dup_delivered",
+                        "faults_injected", "preemptions", "fault_windows",
+                        "lost", "member_ledger", "fast_path",
+                        "fallback_reason")
+
 # cell-type registry: run_cells / ResultCache dispatch on the experiment
-# dataclass, so characterization and adaptation cells share the runner,
-# pool, and on-disk memo.  name -> (experiment cls, result cls, fields, fn)
+# dataclass, so characterization, adaptation and what-if plan cells share
+# the runner, pool, and on-disk memo.
+# name -> (experiment cls, result cls, fields, fn)
 _CELL_TYPES = {
     "StreamExperiment": (StreamExperiment, ExperimentResult,
                          _RESULT_FIELDS, run_experiment),
     "AdaptationExperiment": (AdaptationExperiment, AdaptationResult,
                              _ADAPT_RESULT_FIELDS, run_adaptation),
+    "AdaptationPlan": (AdaptationPlan, AdaptationSummary,
+                       _PLAN_SUMMARY_FIELDS, run_plan),
 }
 
 
@@ -242,23 +260,35 @@ def _execute(exp, registry: MetricRegistry):
     return _CELL_TYPES[type(exp).__name__][3](exp, registry)
 
 
+def cache_key(exp) -> str:
+    """The one key-derivation path for every cell type: cell type + all
+    experiment fields, stable-JSON-hashed under ``CACHE_SCHEMA_VERSION``.
+
+    ``AdaptationPlan.fast`` is an execution *hint* (the fast replay is
+    bit-identical to the scalar DES by contract), so it is excluded: a
+    plan's summary is the same value however it was computed, and the
+    what-if dedupe in ``core.whatif`` keys on this too."""
+    payload_dict = dataclasses.asdict(exp)
+    if type(exp).__name__ == "AdaptationPlan":
+        payload_dict.pop("fast", None)
+    payload = json.dumps(payload_dict, sort_keys=True, default=repr)
+    digest = hashlib.sha256(
+        f"v{CACHE_SCHEMA_VERSION}:{type(exp).__name__}:{payload}".encode())
+    return digest.hexdigest()[:24]
+
+
 class ResultCache:
     """On-disk memo of experiment results keyed by the experiment dataclass
     (cell type + all fields, stable-JSON-hashed), so re-running a sweep only
-    pays for cells whose parameters changed.  Holds both characterization
-    (``ExperimentResult``) and adaptation (``AdaptationResult``) cells."""
+    pays for cells whose parameters changed.  Holds characterization
+    (``ExperimentResult``), adaptation (``AdaptationResult``) and what-if
+    plan (``AdaptationSummary``) cells."""
 
     def __init__(self, root: str | Path) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
-    @staticmethod
-    def key(exp) -> str:
-        payload = json.dumps(dataclasses.asdict(exp), sort_keys=True,
-                             default=repr)
-        digest = hashlib.sha256(
-            f"v{_CACHE_VERSION}:{type(exp).__name__}:{payload}".encode())
-        return digest.hexdigest()[:24]
+    key = staticmethod(cache_key)
 
     def path(self, exp) -> Path:
         return self.root / f"{self.key(exp)}.json"

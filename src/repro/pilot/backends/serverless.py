@@ -55,6 +55,41 @@ DEFAULTS = dict(
 )
 
 
+def service_time_mean(cfg: dict, memory_mb: float, profile: TaskProfile,
+                      cold: bool) -> tuple[float, float]:
+    """Deterministic Lambda service-time model: ``(mean_s, jitter_cv)``.
+
+    Pure function of the calibration constants, container memory, task
+    profile and cold flag — the stochastic part (one lognormal draw around
+    ``mean_s`` with ``jitter_cv``) stays with the caller's simulator.
+    Shared between ``ServerlessSimBackend.service_time`` and the what-if
+    fast replay (``sim.batched``), so both paths run the *same* float
+    arithmetic in the same order: bit-agreement between them is by
+    construction, not by parallel maintenance.
+    """
+    m = min(memory_mb, cfg["memory_cap_mb"])
+    cpu_share = m / cfg["mb_per_vcpu"]
+    t = cfg["invoke_overhead_s"]
+    if cold:
+        t += cfg["cold_start_s"]
+    t += profile.msg_bytes / cfg["net_bw"]
+    # serial_flops run lock-free here: S3 model sharing is last-writer-
+    # wins (no consistent read-modify-write), the paper's "better
+    # resource isolation" on Lambda.
+    t += (profile.flops + profile.serial_flops) / (cpu_share * cfg["flops_per_vcpu"])
+    io_bytes = profile.read_bytes + profile.write_bytes
+    if io_bytes > 0:
+        t += io_bytes / cfg["s3_bw"] + 2 * cfg["s3_latency"]
+    if profile.coherence_peers > 0:
+        # state is externalized: peers' deltas fetched from S3 —
+        # isolated per-container bandwidth, so cost is linear in peers
+        # with a small constant (no shared medium -> tiny kappa).
+        delta = max(profile.write_bytes, 1.0) * 0.05
+        t += profile.coherence_peers * (cfg["s3_latency"] * 0.1 + delta / cfg["s3_bw"])
+    cv = cfg["jitter_cv_ref"] * (cfg["memory_cap_mb"] / m)
+    return t, cv
+
+
 @dataclass
 class _Container:
     cid: int
@@ -233,26 +268,7 @@ class ServerlessSimBackend(Backend):
 
     def service_time(self, cfg: dict, memory_mb: float, profile: TaskProfile,
                      cold: bool) -> float:
-        m = min(memory_mb, cfg["memory_cap_mb"])
-        cpu_share = m / cfg["mb_per_vcpu"]
-        t = cfg["invoke_overhead_s"]
-        if cold:
-            t += cfg["cold_start_s"]
-        t += profile.msg_bytes / cfg["net_bw"]
-        # serial_flops run lock-free here: S3 model sharing is last-writer-
-        # wins (no consistent read-modify-write), the paper's "better
-        # resource isolation" on Lambda.
-        t += (profile.flops + profile.serial_flops) / (cpu_share * cfg["flops_per_vcpu"])
-        io_bytes = profile.read_bytes + profile.write_bytes
-        if io_bytes > 0:
-            t += io_bytes / cfg["s3_bw"] + 2 * cfg["s3_latency"]
-        if profile.coherence_peers > 0:
-            # state is externalized: peers' deltas fetched from S3 —
-            # isolated per-container bandwidth, so cost is linear in peers
-            # with a small constant (no shared medium -> tiny kappa).
-            delta = max(profile.write_bytes, 1.0) * 0.05
-            t += profile.coherence_peers * (cfg["s3_latency"] * 0.1 + delta / cfg["s3_bw"])
-        cv = cfg["jitter_cv_ref"] * (cfg["memory_cap_mb"] / m)
+        t, cv = service_time_mean(cfg, memory_mb, profile, cold)
         return self.sim.lognormal_jitter(t, cv)
 
     def _start(self, pilot: Pilot, cu: ComputeUnit, container: _Container) -> None:

@@ -1,0 +1,875 @@
+"""Batched fast replay of serverless closed-loop adaptation cells.
+
+The what-if engine (``core.whatif``) sweeps (scenario × policy × seed)
+grids whose cells are dominated by DES heap traffic that is *structurally
+predictable* on the serverless platform: the producer's emission times are
+a pure function of the rate program (no RNG), the Kinesis ingest shards
+are processor-sharing queues with no stochastic input, and the only random
+draw in the whole cell is the per-invocation lognormal service jitter.
+This module exploits that structure: it precomputes the emission schedule
+once per (rate spec, horizon) — shared across every seed and policy in a
+tournament — steps the ingest shards in columnar windows between control
+ticks, and replays only the *irreducible* events (appends, invocation
+finishes, control ticks) through a real ``Simulator`` driving the real
+``ControlLoop`` / policy / ``OnlineUSLEstimator`` objects.
+
+Bit-agreement with ``run_adaptation`` is a construction invariant, not an
+aspiration: the control loop, policy stack, USL estimator and the
+service-time model (``serverless.service_time_mean``) are the *same code
+objects* the scalar path runs; the replay reproduces the scalar path's
+float arithmetic (VFT virtual-time updates, ``now + delay`` timestamp
+sums, the 256-block normal stream via ``Simulator.normals``) operation for
+operation, and ``tests/test_batched.py`` asserts equality field-by-field
+across seeds and policies.
+
+Eligibility (static, checked before anything runs):
+
+* ``engine == "sim"`` — the wall clock cannot be replayed;
+* ``machine == "serverless"`` — HPC cells couple through the shared
+  filesystem and the model lock, which serializes *across* partitions and
+  breaks the per-shard window independence this replay exploits;
+* no fault plan — crash/preempt/stall handlers reorder the event stream
+  data-dependently;
+* ``batch_max == 1`` — the replay models one invocation per message (the
+  paper's Lambda mapping);
+* the task working set fits the container (the memory-failure path is a
+  retry loop, not a replayable fast path).
+
+Runtime fallbacks (the replay *starts*, then discovers the cell leaves the
+fast regime): a straggler speculation would fire, or an invocation would
+exceed the walltime limit.  Both raise ``_FallbackNeeded``; the caller
+reruns the cell on the scalar DES and the reason is logged and recorded on
+the summary (``fallback_reason``).
+
+The jax lockstep stepper (``lockstep_completion_times``) batches S seeds
+of an even narrower cell class — static policy, one partition, serial
+ingest — into one ``vmap``-ed scan, mirroring ``fit_usl_batch``'s stacked
+LM.  It runs in float32 on the accelerator path, so its agreement
+contract is a documented tolerance (``LOCKSTEP_RTOL``), not bit equality;
+it feeds the perf-smoke informational row, never the tournament results.
+"""
+
+from __future__ import annotations
+
+import heapq
+import json
+import logging
+import math
+import statistics
+from collections import deque
+
+import numpy as np
+
+from repro.core.autoscale import ControlLoop, policy_from_spec
+from repro.core.metrics import percentile_summary
+from repro.core.miniapp import (AdaptationExperiment, AdaptationPlan,
+                                AdaptationSummary, KMeansStreamWorkload,
+                                POINT_BYTES, adaptation_profile_factory,
+                                scaling_policy_spec)
+from repro.pilot.backends.serverless import DEFAULTS, service_time_mean
+from repro.sim.des import Simulator
+from repro.streaming.producer import rate_program_from_spec
+
+__all__ = ["try_fast_adaptation", "lockstep_completion_times",
+           "lockstep_eligibility", "LOCKSTEP_RTOL"]
+
+log = logging.getLogger("repro.sim.batched")
+
+# wiring constants of run_adaptation's serverless pipeline (the replay
+# must agree with them exactly; they are assembly facts, not knobs)
+_REQUEST_LATENCY = 0.01      # PartitionIngest default request_latency
+_INGEST_BW = 1e6             # run_adaptation's bw_per_partition (Kinesis)
+_IDLE_RESOLUTION_S = 0.25    # SyntheticProducer idle probe spacing
+
+_INF = float("inf")
+
+
+class _FallbackNeeded(RuntimeError):
+    """The cell left the replayable regime mid-run — rerun it scalar."""
+
+
+# ---------------------------------------------------------------------------
+# emission schedule: pure function of (rate spec, horizon), shared per grid
+# ---------------------------------------------------------------------------
+
+_EMISSION_CACHE: dict[tuple, tuple[list[float], float, list[float]]] = {}
+_EMISSION_CACHE_MAX = 32
+
+
+def _emission_schedule(rate_spec: dict, horizon_s: float,
+                       cap: int) -> tuple[list[float], float, list[float]]:
+    """Replay ``SyntheticProducer._tick_program``'s event chain off-line.
+
+    Returns ``(emit_times, finish_t, sched_times)``: the exact float
+    timestamps of every emission, the production-over event time, and for
+    each emission the timestamp of the *program event that scheduled it*
+    (the previous emission or idle probe — needed to resolve heap-order
+    ties when an emission lands exactly on a control-tick boundary).
+    The chain is RNG-free, so one schedule serves every seed and policy of
+    a what-if grid.
+    """
+    key = (json.dumps(rate_spec, sort_keys=True, default=str),
+           horizon_s, cap)
+    hit = _EMISSION_CACHE.get(key)
+    if hit is not None:
+        return hit
+    program = rate_program_from_spec(rate_spec)
+    emit: list[float] = []
+    sched: list[float] = []
+    t = 0.0
+    prev = 0.0          # ts of the program event that scheduled event at t
+    while True:
+        if t >= horizon_s or len(emit) >= cap:
+            finish_t = t
+            finish_sched = prev
+            break
+        rate = program.rate(t)
+        if rate <= 1e-9:
+            prev = t
+            t = t + _IDLE_RESOLUTION_S
+            continue
+        emit.append(t)
+        sched.append(prev)
+        prev = t
+        t = t + 1.0 / rate
+    out = (emit, finish_t, sched + [finish_sched])
+    if len(_EMISSION_CACHE) >= _EMISSION_CACHE_MAX:
+        _EMISSION_CACHE.pop(next(iter(_EMISSION_CACHE)))
+    _EMISSION_CACHE[key] = out
+    return out
+
+
+def _program_beats_tick(event_t: float, sched_t: float,
+                        interval_s: float) -> bool:
+    """Heap order of a producer program event vs the control tick at the
+    same timestamp ``event_t`` (an exact-float collision, e.g. a 2 Hz
+    emission grid meeting 2 s ticks).
+
+    Both are plain ``(ts, seq)`` heap entries, so the earlier *scheduling*
+    wins: the program event was pushed at ``sched_t``, the tick at
+    ``event_t - interval_s``.  When those collide too, the chains are
+    recursively tied; at the root (t=0) the producer starts before the
+    loop in ``run_adaptation``'s assembly order, so the producer wins."""
+    tick_armed = event_t - interval_s
+    while True:
+        if sched_t < tick_armed:
+            return True
+        if sched_t > tick_armed:
+            return False
+        if sched_t <= 0.0:
+            return True          # setup order: producer.start before loop.start
+        # both pushed during events at the same earlier timestamp — compare
+        # one step further back along each chain
+        event_t, tick_armed = sched_t, tick_armed - interval_s
+        sched_t = event_t - interval_s  # conservative: unknown exact program
+        # spacing this far back only matters on pathological rate programs;
+        # equal spacing keeps recursing toward the t=0 base case
+
+
+# ---------------------------------------------------------------------------
+# ingest shards: SharedResource's VFT algebra, windowed
+# ---------------------------------------------------------------------------
+
+class _Shard:
+    """One Kinesis shard as ``SharedResource``'s virtual-finish-time state,
+    advanced in windows instead of per-event heap traffic.  The float
+    updates are copied from ``des.SharedResource`` verbatim so completion
+    timestamps agree bitwise."""
+
+    __slots__ = ("capacity", "vtime", "last_ts", "heap", "flows",
+                 "next_fid", "next_t", "pending")
+
+    def __init__(self, capacity: float) -> None:
+        self.capacity = capacity
+        self.vtime = 0.0
+        self.last_ts = 0.0
+        self.heap: list[tuple[float, int]] = []
+        self.flows: dict[int, tuple[int, int]] = {}   # fid -> (msg, partition)
+        self.next_fid = 0
+        self.next_t: float | None = None
+        self.pending: deque = deque()    # (submit_ts, msg_idx, partition)
+
+    def submit(self, t: float, work: float, item: tuple[int, int]) -> None:
+        n = len(self.flows)
+        if n:
+            dt = t - self.last_ts
+            if dt > 0:
+                self.vtime += dt * (self.capacity / n)
+        self.last_ts = t
+        fid = self.next_fid
+        self.next_fid = fid + 1
+        self.flows[fid] = item
+        heapq.heappush(self.heap, (self.vtime + work, fid))
+        delay = max(self.heap[0][0] - self.vtime, 0.0) \
+            * (n + 1) / self.capacity
+        self.next_t = t + delay
+
+    def complete(self, t: float) -> tuple[int, int]:
+        n = len(self.flows)
+        dt = t - self.last_ts
+        if dt > 0:
+            self.vtime += dt * (self.capacity / n)
+        self.last_ts = t
+        _vtag, fid = heapq.heappop(self.heap)
+        item = self.flows.pop(fid)
+        if n > 1:
+            delay = max(self.heap[0][0] - self.vtime, 0.0) \
+                * (n - 1) / self.capacity
+            self.next_t = t + delay
+        else:
+            self.next_t = None
+        return item
+
+
+# ---------------------------------------------------------------------------
+# facades: the data plane as plain state, the control plane real
+# ---------------------------------------------------------------------------
+
+class _Container:
+    __slots__ = ("warm", "busy")
+
+    def __init__(self) -> None:
+        self.warm = False
+        self.busy = False
+
+
+class _Invocation:
+    __slots__ = ("partition", "msg", "append_ts", "deadline", "start_ts")
+
+    def __init__(self, partition: int, msg: int, append_ts: float,
+                 deadline: float) -> None:
+        self.partition = partition
+        self.msg = msg
+        self.append_ts = append_ts
+        self.deadline = deadline
+        self.start_ts = 0.0
+
+
+class _Partition:
+    __slots__ = ("pending", "inflight")
+
+    def __init__(self) -> None:
+        self.pending: deque = deque()    # (msg_idx, append_ts)
+        self.inflight = False
+
+
+class _FastBroker:
+    """What the ControlLoop sees of the broker: active/total shard counts."""
+
+    __slots__ = ("active", "total")
+
+    def __init__(self, initial: int) -> None:
+        self.active = initial
+        self.total = initial
+
+    def repartition(self, topic: str, n: int) -> int:
+        if n > self.total:
+            self.total = n
+        self.active = n
+        return n
+
+
+class _FastBackend:
+    """``ServerlessSimBackend``'s container pool for one pilot, minus the
+    fault surface.  Queue and free-pool disciplines are replicated exactly
+    (FIFO queue, MRU free deque) because they fix the *order* in which
+    invocations draw their jitter from the shared normal stream."""
+
+    def __init__(self, run: "_FastRun", cfg: dict, memory_mb: int,
+                 walltime_s: float, n_containers: int) -> None:
+        self._run = run
+        self.cfg = cfg
+        self.memory_mb = memory_mb
+        self.walltime_s = walltime_s
+        self.containers = [_Container() for _ in range(max(1, n_containers))]
+        self.free = deque(self.containers)
+        self.queue: deque = deque()
+        self.target = len(self.containers)
+        self._submit_rec: _Invocation | None = None
+        # (profile id, cold) -> (mean, cv): profile objects are cached for
+        # the run's lifetime by adaptation_profile_factory, so ids are stable
+        self._svc_cache: dict[tuple[int, bool], tuple[float, float]] = {}
+
+    # -- ControlLoop's Backend surface (pilot arg unused: one pilot) --------
+    def allocation(self, pilot=None) -> int:
+        return self.target
+
+    def effective_allocation(self, pilot=None) -> int:
+        return len(self.containers)
+
+    def scale_to(self, pilot, n: int) -> int:
+        n = max(1, min(int(n), int(self.cfg["max_containers"])))
+        self.target = n
+        containers, free = self.containers, self.free
+        while len(containers) > n and free:
+            containers.remove(free.pop())
+        while len(containers) < n:
+            c = _Container()
+            containers.append(c)
+            free.append(c)
+        self.dispatch()
+        return n
+
+    # -- execution ----------------------------------------------------------
+    def submit(self, rec: _Invocation) -> None:
+        self.queue.append(rec)
+        prev = self._submit_rec
+        self._submit_rec = rec
+        self.dispatch()
+        self._submit_rec = prev
+
+    def dispatch(self) -> None:
+        queue, free = self.queue, self.free
+        while queue:
+            if not free:
+                return
+            self._start(queue.popleft(), free.popleft())
+
+    def _start(self, rec: _Invocation, c: _Container) -> None:
+        run = self._run
+        sim = run.sim
+        profile = run.profile_for(None)
+        cold = not c.warm
+        c.warm = True
+        c.busy = True
+        key = (id(profile), cold)
+        svc = self._svc_cache.get(key)
+        if svc is None:
+            svc = self._svc_cache[key] = service_time_mean(
+                self.cfg, self.memory_mb, profile, cold)
+        t_mean, cv = svc
+        dt = sim.lognormal_jitter(t_mean, cv)
+        if dt > self.walltime_s:
+            raise _FallbackNeeded(
+                f"invocation needs {dt:.1f}s > walltime {self.walltime_s}s "
+                "(walltime-kill/retry path)")
+        finish_ts = sim.now + dt
+        # the scalar path's straggler event at `deadline` fires iff the
+        # invocation is still in flight when it pops; at an exact-float tie
+        # the finish event wins only when it was scheduled first (the
+        # invocation started inside the submit call, before the straggler
+        # was armed)
+        if finish_ts > rec.deadline or (finish_ts == rec.deadline
+                                        and rec is not self._submit_rec):
+            raise _FallbackNeeded(
+                "straggler speculation would fire (duplicate dispatch)")
+        rec.start_ts = sim.now
+        sim.schedule_fast(dt, lambda: self._finish(rec, c))
+
+    def _finish(self, rec: _Invocation, c: _Container) -> None:
+        c.busy = False
+        if len(self.containers) > self.target:
+            self.containers.remove(c)      # scale-down landed mid-flight
+        else:
+            self.free.appendleft(c)
+        self._run.engine.on_final_done(rec)
+        self.dispatch()
+
+
+class _FastEngine:
+    """``SimStreamingEngine``'s partition consumer + the loop's
+    EngineControlSurface, over precomputed appends."""
+
+    def __init__(self, run: "_FastRun", initial: int) -> None:
+        self._run = run
+        self.parts = [_Partition() for _ in range(initial)]
+        self.inflight_n = 0
+        self.appended_seen = 0
+        self.paused_until = 0.0
+        self.completed_runtimes: list[float] = []
+        self._straggler_cache = (0, _INF)
+
+    # -- EngineControlSurface ------------------------------------------------
+    def now(self) -> float:
+        return self._run.sim.now
+
+    def call_later(self, delay_s: float, fn) -> None:
+        # the only call_later client is the ControlLoop's tick chain; wrap
+        # it so each tick is followed by the producer/ingest window advance
+        # (emissions in [T, T+interval) see the post-tick partition count,
+        # exactly as their heap events would)
+        run = self._run
+
+        def tick() -> None:
+            pre_active = run.broker.active
+            fn()
+            run.after_tick(pre_active)
+
+        run.sim.schedule_fast(delay_s, tick)
+
+    def repartition(self, migration_s: float = 0.0) -> None:
+        total = self._run.broker.total
+        parts = self.parts
+        while len(parts) < total:
+            parts.append(_Partition())
+        if migration_s > 0.0:
+            sim = self._run.sim
+            resume_at = sim.now + migration_s
+            if resume_at > self.paused_until:
+                self.paused_until = resume_at
+                sim.schedule_fast(migration_s, self._resume)
+
+    def _resume(self) -> None:
+        if self._run.sim.now < self.paused_until:
+            return     # superseded by a longer, later migration pause
+        for p in range(len(self.parts)):
+            self.drain(p)
+
+    # -- consumer ------------------------------------------------------------
+    def straggler_timeout(self) -> float:
+        runtimes = self.completed_runtimes
+        n = len(runtimes)
+        if n < 3:
+            return _INF
+        cached_n, cached = self._straggler_cache
+        if n != cached_n and (n < 32 or n % 32 == 0 or cached_n < 3):
+            cached = max(4.0 * statistics.median(runtimes), 1e-3)
+            self._straggler_cache = (n, cached)
+        return cached
+
+    def on_append(self, msg: int, partition: int, ts: float) -> None:
+        self.appended_seen += 1
+        if partition >= len(self.parts):
+            self.repartition()
+        self.parts[partition].pending.append((msg, ts))
+        self.drain(partition)
+
+    def drain(self, partition: int) -> None:
+        run = self._run
+        if run.sim.now < self.paused_until:
+            return     # migrating: the resume sweep re-drains everything
+        if partition >= len(self.parts):
+            self.repartition()
+        ps = self.parts[partition]
+        if ps.inflight or not ps.pending:
+            return
+        msg, append_ts = ps.pending.popleft()
+        ps.inflight = True
+        self.inflight_n += 1
+        timeout = self.straggler_timeout()
+        deadline = run.sim.now + timeout if timeout != _INF else _INF
+        run.backend.submit(_Invocation(partition, msg, append_ts, deadline))
+
+    def on_final_done(self, rec: _Invocation) -> None:
+        run = self._run
+        now = run.sim.now
+        run.processed += 1
+        run.latencies.append(now - rec.append_ts)
+        self.completed_runtimes.append(now - rec.start_ts)
+        ps = self.parts[rec.partition]
+        ps.inflight = False
+        self.inflight_n -= 1
+        self.drain(rec.partition)
+
+    def is_finished(self) -> bool:
+        run = self._run
+        if not run.producer_done:
+            return False
+        if self.inflight_n or run.processed < self.appended_seen:
+            return False
+        return all(not ps.pending and not ps.inflight for ps in self.parts)
+
+
+class _FastMetrics:
+    """The MetricRegistry surface the ControlLoop consumes, O(1) per call:
+    ``produce`` counts walk the shared emission schedule, ``complete``
+    counts read the processed counter, trace emission is dropped (the
+    summary carries no event columns)."""
+
+    def __init__(self, run: "_FastRun") -> None:
+        self._run = run
+        self._produce_i = 0
+
+    def kind_count(self, run_id: str, kind: str) -> int:
+        run = self._run
+        if kind == "produce":
+            emit = run.emit_times
+            first = run.boundary_first
+            now = run.sim.now
+            i = self._produce_i
+            n = len(emit)
+            # an emission exactly at a tick timestamp counts iff its heap
+            # event popped before the tick's (precomputed boundary order)
+            while i < n and (emit[i] < now or (emit[i] == now and first[i])):
+                i += 1
+            self._produce_i = i
+            return i
+        if kind == "complete":
+            return run.processed
+        return 0
+
+    def observe(self, name: str, ts: float, value: float) -> None:
+        pass
+
+    def record(self, *args, **kwargs) -> None:
+        pass
+
+
+class _FastPilot:
+    __slots__ = ("backend",)
+
+    def __init__(self, backend: _FastBackend) -> None:
+        self.backend = backend
+
+
+# ---------------------------------------------------------------------------
+# the replay driver
+# ---------------------------------------------------------------------------
+
+class _FastRun:
+    """One eligible cell, replayed: real Simulator + ControlLoop/policy,
+    columnar producer/ingest, event-true backend/engine facades."""
+
+    def __init__(self, plan: AdaptationPlan) -> None:
+        exp = plan.experiment
+        self.plan = plan
+        self.exp = exp
+        self.sim = Simulator(seed=exp.seed)
+
+        static_n = (exp.static_partitions if exp.static_partitions is not None
+                    else exp.max_partitions)
+        initial = static_n if exp.scaling_policy == "static" \
+            else exp.initial_partitions
+        initial = max(1, min(initial, exp.max_partitions))
+
+        cfg = dict(DEFAULTS)
+        cfg.update(exp.backend_attrs)
+        n_containers = min(initial, int(cfg["max_containers"]))
+
+        program = rate_program_from_spec(exp.rate)
+        cap = int(program.mean_messages(0.0, exp.horizon_s) * 2 + 1000)
+        self.emit_times, self.finish_t, sched_times = _emission_schedule(
+            exp.rate, exp.horizon_s, cap)
+        self.sent_total = len(self.emit_times)
+        self.wl_work = float(exp.points * POINT_BYTES)
+
+        # exact-float collisions between producer program events and control
+        # ticks (a 2 Hz grid meeting 2 s ticks does this every boundary):
+        # resolve each once, up front
+        interval = exp.control_interval_s
+        tick_set = _tick_times(interval, max(self.finish_t,
+                                             self.emit_times[-1]
+                                             if self.emit_times else 0.0))
+        self.boundary_first = [
+            t in tick_set
+            and _program_beats_tick(t, sched_times[i], interval)
+            for i, t in enumerate(self.emit_times)]
+        self.finish_at_tick_after = (
+            self.finish_t in tick_set
+            and not _program_beats_tick(self.finish_t, sched_times[-1],
+                                        interval))
+
+        self.broker = _FastBroker(initial)
+        self.backend = _FastBackend(self, cfg, exp.memory_mb,
+                                    900.0, n_containers)   # PilotDescription default walltime
+        self.engine = _FastEngine(self, initial)
+        self.metrics = _FastMetrics(self)
+        self.profile_for = adaptation_profile_factory(
+            exp, lambda: self.sim.now, lambda: self.loop.allocation)
+        self.shards = [_Shard(_INGEST_BW) for _ in range(exp.max_partitions)]
+
+        self.processed = 0
+        self.appended_total = 0
+        self.latencies: list[float] = []
+        self.producer_appended = 0
+        self.production_over = False
+        self.producer_done = False
+        self._next_emit = 0
+
+        self.loop = ControlLoop(
+            self.engine, self.broker, "points", _FastPilot(self.backend),
+            policy_from_spec(scaling_policy_spec(exp), initial=initial),
+            metrics=self.metrics, run_id="fast",
+            interval_s=exp.control_interval_s, slo_lag=exp.slo_lag,
+            migration_s_per_delta=exp.migration_s_per_delta,
+            fault_signal=None)
+
+    # -- producer/ingest window machinery -----------------------------------
+    def _assign_window(self, window_end: float, pre_active: int) -> None:
+        """Assign emissions in [sim.now, window_end) to partitions and step
+        each shard's VFT state up to the window's append horizon."""
+        emit = self.emit_times
+        first = self.boundary_first
+        shards = self.shards
+        n_shards = len(shards)
+        active = self.broker.active
+        now = self.sim.now
+        i = self._next_emit
+        n = len(emit)
+        while i < n and emit[i] < window_end:
+            t = emit[i]
+            # an emission that popped before this tick saw the pre-tick
+            # partition count
+            p = i % (pre_active if (t == now and first[i]) else active)
+            shards[p % n_shards].pending.append(
+                (t + _REQUEST_LATENCY, i, p))
+            i += 1
+        self._next_emit = i
+        bound = window_end + _REQUEST_LATENCY
+        for sh in shards:
+            self._drain_shard(sh, bound)
+
+    def _drain_shard(self, sh: _Shard, bound: float) -> None:
+        """Run one shard's submit/complete events with timestamps < bound
+        (no later submit can predate ``bound``, so every completion this
+        finalizes is final)."""
+        pending = sh.pending
+        while True:
+            t_sub = pending[0][0] if pending else _INF
+            t_comp = sh.next_t if sh.next_t is not None else _INF
+            if t_comp <= t_sub:
+                if t_comp >= bound:
+                    return
+                msg, part = sh.complete(t_comp)
+                self._schedule_append(t_comp, msg, part)
+            else:
+                if t_sub >= bound:
+                    return
+                _ts, msg, part = pending.popleft()
+                sh.submit(t_sub, self.wl_work, (msg, part))
+
+    def _schedule_append(self, t: float, msg: int, partition: int) -> None:
+        def append() -> None:
+            self.appended_total += 1
+            self.engine.on_append(msg, partition, t)
+            self.producer_appended += 1
+            if self.production_over \
+                    and self.producer_appended >= self.sent_total:
+                self.producer_done = True
+
+        self.sim.schedule_at(t, append)
+
+    def _finish_production(self) -> None:
+        self.production_over = True
+        if self.producer_appended >= self.sent_total:
+            self.producer_done = True
+
+    def after_tick(self, pre_active: int) -> None:
+        now = self.sim.now
+        if self.finish_at_tick_after and not self.production_over \
+                and self.finish_t == now:
+            self._finish_production()
+        self._assign_window(now + self.exp.control_interval_s, pre_active)
+
+    # -- run -----------------------------------------------------------------
+    def run(self) -> AdaptationSummary:
+        exp = self.exp
+        sim = self.sim
+        # production-over event (unless it resolves after a colliding tick,
+        # which after_tick handles at that exact timestamp)
+        if not self.finish_at_tick_after:
+            self.sim.schedule_at(self.finish_t, self._finish_production)
+        # the pre-first-tick window: assigned at setup, like the producer's
+        # t=0 start event
+        self._assign_window(exp.control_interval_s, self.broker.active)
+        self.loop.start()
+        max_virtual = exp.horizon_s * 6.0 + 600.0
+        sim.run_until(t=sim.now + max_virtual,
+                      predicate=self.engine.is_finished)
+        drained = self.engine.is_finished()
+        self.loop.stop()
+        loop = self.loop
+        wall = max(sim.now, 1e-9)
+        return AdaptationSummary(
+            experiment=self.plan,
+            slo_violations=loop.slo_violations,
+            ticks=loop.ticks,
+            cost_integral=loop.cost_integral,
+            scale_events=loop.scale_events,
+            produced=self.sent_total,
+            processed=self.processed,
+            throughput=self.processed / wall,
+            latency_px=percentile_summary(
+                np.asarray(self.latencies, dtype=np.float64)),
+            final_allocation=loop.allocation,
+            drained=drained,
+            drain_s=max(0.0, sim.now - exp.horizon_s),
+            refits=loop.refit_events,
+            abandoned=0, dup_delivered=0, faults_injected=0, preemptions=0,
+            fault_windows=loop.fault_windows,
+            lost=self.appended_total - self.processed,
+            member_ledger=[],
+            fast_path=True, fallback_reason=None)
+
+
+def _tick_times(interval_s: float, t_max: float) -> frozenset[float]:
+    """The exact float timestamps of the tick chain i, 2i, 3i, ... ≤ t_max
+    (each produced by repeated ``now + interval`` float sums — NOT k * i,
+    which can differ in the last ulp)."""
+    if interval_s <= 0.0:
+        return frozenset()
+    ticks = []
+    acc = 0.0
+    while True:
+        acc += interval_s
+        if acc > t_max:
+            return frozenset(ticks)
+        ticks.append(acc)
+
+
+def _ineligible(exp: AdaptationExperiment) -> str | None:
+    if exp.engine != "sim":
+        return f"engine={exp.engine!r} (wall clock is not replayable)"
+    if exp.machine == "federated":
+        return "federated machine (member routing/breaker state machine)"
+    if exp.machine != "serverless":
+        return (f"machine={exp.machine!r} (shared-filesystem coupling "
+                "across partitions)")
+    if exp.faults:
+        return "fault plan present (crash/preempt/stall semantics)"
+    if exp.batch_max != 1:
+        return f"batch_max={exp.batch_max} (replay models 1 msg/invocation)"
+    cfg = dict(DEFAULTS)
+    cfg.update(exp.backend_attrs)
+    profile = KMeansStreamWorkload(
+        points=exp.points, centroids=exp.centroids,
+        policy=exp.effective_policy, n_partitions=1).profile()
+    if profile.memory_mb > min(exp.memory_mb, cfg["memory_cap_mb"]):
+        return "working set exceeds container memory (failure/retry path)"
+    return None
+
+
+def try_fast_adaptation(
+        plan: AdaptationPlan) -> tuple[AdaptationSummary | None, str | None]:
+    """Replay ``plan`` on the batched fast path if it qualifies.
+
+    Returns ``(summary, None)`` on success or ``(None, reason)`` when the
+    cell is ineligible or leaves the fast regime mid-run; the reason is
+    logged and the caller reruns the cell on the scalar DES."""
+    exp = plan.experiment
+    reason = _ineligible(exp)
+    if reason is None:
+        try:
+            return _FastRun(plan).run(), None
+        except _FallbackNeeded as fb:
+            reason = str(fb)
+    log.info("fast replay fallback (%s/%s seed %d): %s",
+             exp.machine, exp.scaling_policy, exp.seed, reason)
+    return None, reason
+
+
+# ---------------------------------------------------------------------------
+# jax lockstep: S seeds of a static single-partition cell in one vmap
+# ---------------------------------------------------------------------------
+
+# float32 agreement bound for the jax path vs the float64 scalar DES.  The
+# scan is a few thousand fused multiply/exp/max ops; observed worst-case
+# relative error is ~1e-6, the gate leaves an order of magnitude of head
+# room.  The lockstep path is informational (perf rows, tolerance tests) —
+# tournament results always come from the bit-exact replay above.
+LOCKSTEP_RTOL = 1e-4
+
+
+def lockstep_eligibility(exp: AdaptationExperiment) -> str | None:
+    """The lockstep scan collapses the whole cell to one recurrence
+    ``finish[i] = max(append[i], finish[i-1]) + dt[i]`` — valid only when
+    nothing can reorder or replicate invocations."""
+    base = _ineligible(exp)
+    if base is not None:
+        return base
+    if exp.scaling_policy != "static":
+        return (f"scaling_policy={exp.scaling_policy!r} (lockstep needs a "
+                "static allocation: no scale/migration events)")
+    static_n = (exp.static_partitions if exp.static_partitions is not None
+                else exp.max_partitions)
+    if static_n != 1:
+        return (f"static_partitions={static_n} (lockstep models one "
+                "partition, one container)")
+    if exp.drift_t_s is not None:
+        return "cost drift present (service time becomes time-dependent)"
+    return None
+
+
+def lockstep_completion_times(exp: AdaptationExperiment, seeds: list[int],
+                              with_appends: bool = False) -> np.ndarray:
+    """Per-message completion timestamps for S seeds of one qualifying
+    cell, advanced in lockstep (jax ``vmap`` over the seed axis when jax is
+    importable, a numpy scan otherwise — same arithmetic, float32 both
+    ways).
+
+    The jitter draws come from ``Simulator.normals`` — the same 256-block
+    stream the scalar DES consumes — so seed s's column sees exactly the
+    draws scalar seed s would; only the float width differs.
+
+    ``with_appends=True`` additionally returns the (seed-independent)
+    broker-append timestamps — ``finishes - appends`` is the pipeline
+    latency the scalar DES reports in ``latency_px``, the quantity the
+    ``LOCKSTEP_RTOL`` agreement contract is stated against.
+    """
+    reason = lockstep_eligibility(exp)
+    if reason is not None:
+        raise ValueError(f"cell does not qualify for lockstep: {reason}")
+
+    program = rate_program_from_spec(exp.rate)
+    cap = int(program.mean_messages(0.0, exp.horizon_s) * 2 + 1000)
+    emit_times, _finish_t, _sched = _emission_schedule(
+        exp.rate, exp.horizon_s, cap)
+    n_msgs = len(emit_times)
+
+    # append times: one shard, no RNG — identical across seeds
+    shard = _Shard(_INGEST_BW)
+    work = float(exp.points * POINT_BYTES)
+    appends = np.empty(n_msgs, dtype=np.float64)
+    for i, t in enumerate(emit_times):
+        shard.pending.append((t + _REQUEST_LATENCY, i, 0))
+    # one unbounded drain: every submit is already queued in time order
+    out: list[tuple[float, int]] = []
+    pending = shard.pending
+    while pending or shard.next_t is not None:
+        t_sub = pending[0][0] if pending else _INF
+        t_comp = shard.next_t if shard.next_t is not None else _INF
+        if t_comp <= t_sub:
+            msg, _p = shard.complete(t_comp)
+            out.append((t_comp, msg))
+        else:
+            _ts, msg, _p = pending.popleft()
+            shard.submit(t_sub, work, (msg, 0))
+    for t, msg in out:
+        appends[msg] = t
+
+    # per-message service-time means: first invocation cold, rest warm
+    profile = KMeansStreamWorkload(
+        points=exp.points, centroids=exp.centroids,
+        policy=exp.effective_policy, n_partitions=1).profile()
+    cfg = dict(DEFAULTS)
+    cfg.update(exp.backend_attrs)
+    mean_cold, cv = service_time_mean(cfg, exp.memory_mb, profile, True)
+    mean_warm, _cv = service_time_mean(cfg, exp.memory_mb, profile, False)
+    means = np.full(n_msgs, mean_warm)
+    if n_msgs:
+        means[0] = mean_cold
+
+    # the scalar stream's draws, per seed (bit-identical block consumption)
+    z = np.stack([Simulator(seed=s).normals(n_msgs) for s in seeds])
+    sigma2 = math.log1p(cv * cv)
+    a, b = -0.5 * sigma2, math.sqrt(sigma2)
+
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        def chain(z_row):
+            dt = jnp.asarray(means, dtype=jnp.float32) \
+                * jnp.exp(a + b * z_row.astype(jnp.float32))
+            ap = jnp.asarray(appends, dtype=jnp.float32)
+
+            def step(prev_finish, inputs):
+                append_t, dt_i = inputs
+                finish = jnp.maximum(append_t, prev_finish) + dt_i
+                return finish, finish
+
+            _last, finishes = jax.lax.scan(step, jnp.float32(0.0), (ap, dt))
+            return finishes
+
+        finishes = np.asarray(jax.vmap(chain)(jnp.asarray(z)))
+        return (finishes, appends) if with_appends else finishes
+    except ImportError:     # pragma: no cover - jax is in the image
+        dt = means.astype(np.float32)[None, :] \
+            * np.exp(a + b * z.astype(np.float32))
+        ap = appends.astype(np.float32)
+        finishes = np.empty((len(seeds), n_msgs), dtype=np.float32)
+        prev = np.zeros(len(seeds), dtype=np.float32)
+        for i in range(n_msgs):
+            prev = np.maximum(ap[i], prev) + dt[:, i]
+            finishes[:, i] = prev
+        return (finishes, appends) if with_appends else finishes

@@ -85,6 +85,19 @@ class Simulator:
             raise ValueError(f"negative delay {delay}")
         heapq.heappush(self._queue, (self.now + delay, next(self._seq), fn))
 
+    def schedule_at(self, ts: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` at the *absolute* virtual timestamp ``ts``.
+
+        Batched-stepping hook: a stepper that precomputes event times as
+        exact floats (e.g. the what-if fast replay's ingest completions)
+        must not round-trip them through ``now + (ts - now)`` — that float
+        detour changes the timestamp in the last ulp and breaks
+        bit-agreement with the scalar path.  Same ``(ts, seq)`` key space
+        as ``schedule``/``schedule_fast``."""
+        if ts < self.now:
+            raise ValueError(f"timestamp {ts} is in the past (now={self.now})")
+        heapq.heappush(self._queue, (ts, next(self._seq), fn))
+
     def cancel(self, ev: _Scheduled) -> None:
         ev.canceled = True
 
@@ -170,6 +183,40 @@ class Simulator:
             params = (-0.5 * sigma2, math.sqrt(sigma2))
             self._jitter_params[cv] = params
         return mean * math.exp(params[0] + params[1] * self._next_normal())
+
+    def jitter_coeffs(self, cv: float) -> tuple[float, float]:
+        """``(a, b)`` such that ``lognormal_jitter(mean, cv) ==
+        mean * exp(a + b * z)`` for the next standard-normal draw ``z``.
+
+        Batched-stepping hook: lets a columnar stepper apply the identical
+        jitter transform to a prefetched block of draws.  Uses (and fills)
+        the same per-``cv`` coefficient cache as ``lognormal_jitter``."""
+        params = self._jitter_params.get(cv)
+        if params is None:
+            sigma2 = math.log1p(cv * cv)
+            params = (-0.5 * sigma2, math.sqrt(sigma2))
+            self._jitter_params[cv] = params
+        return params
+
+    def normals(self, k: int) -> np.ndarray:
+        """The next ``k`` standard-normal draws as one array.
+
+        Batched-stepping hook: consumes the *same* 256-draw prefetched
+        block stream as the per-event ``_next_normal``, so a vectorized
+        stepper that pre-draws its jitter sees bit-identical values to a
+        scalar run making ``k`` sequential ``lognormal_jitter`` calls."""
+        out = np.empty(k, dtype=np.float64)
+        filled = 0
+        while filled < k:
+            if self._z_block is None or self._z_i >= 256:
+                self._z_block = self.rng.standard_normal(256)
+                self._z_i = 0
+            take = min(k - filled, 256 - self._z_i)
+            out[filled:filled + take] = \
+                self._z_block[self._z_i:self._z_i + take]
+            self._z_i += take
+            filled += take
+        return out
 
 
 class SimLock:

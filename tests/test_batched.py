@@ -1,0 +1,163 @@
+"""The vectorized fast replay (`sim.batched`) vs the scalar DES.
+
+The fast path's contract is *bit identity*: ``try_fast_adaptation`` must
+reproduce ``run_adaptation``'s summary exactly (every count, every float)
+on qualifying serverless cells, and must decline — with a log-visible
+reason — on anything it cannot replay (federation, fault plans, threaded
+engine, HPC machines).  The jax lockstep stepper has the weaker documented
+contract: float32 agreement within ``LOCKSTEP_RTOL`` on per-message
+pipeline latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import percentile_summary
+from repro.core.miniapp import (AdaptationExperiment, AdaptationPlan,
+                                run_adaptation, run_plan,
+                                summarize_adaptation)
+from repro.sim.batched import (LOCKSTEP_RTOL, lockstep_completion_times,
+                               lockstep_eligibility, try_fast_adaptation)
+
+# fig8's serverless drift-cell shape at a reduced horizon: drift bites at
+# t=25, the online policy re-fits, the controller scales both ways — the
+# scenario exercises cold starts, jitter draws, catch-up bursts, refit
+# ticks and drain, everything the replay must reproduce event-for-event
+DRIFT_CELL = dict(
+    machine="serverless", usl_sigma=0.0, usl_kappa=3.0e-4, usl_gamma=1.94,
+    horizon_s=90.0, max_partitions=16, slo_lag=32, control_interval_s=2.0,
+    stabilization_s=0.0, scale_down_hysteresis=0.08, headroom=0.0,
+    catchup_horizon_s=8.0, refit_interval_s=5.0, max_step_up=2,
+    drift_t_s=25.0, drift_factor=1.8, refit_half_life_s=25.0,
+    rate=dict(kind="step", base_hz=2.0, high_hz=10.0, t_step=15.0,
+              t_end=70.0))
+
+SEEDS = tuple(range(8))
+
+SUMMARY_FIELDS = ("slo_violations", "ticks", "cost_integral", "scale_events",
+                  "produced", "processed", "throughput", "latency_px",
+                  "final_allocation", "drained", "drain_s", "refits",
+                  "abandoned", "dup_delivered", "lost")
+
+
+def _cell(scaling_policy: str, seed: int, **over) -> AdaptationExperiment:
+    return AdaptationExperiment(scaling_policy=scaling_policy, seed=seed,
+                                **{**DRIFT_CELL, **over})
+
+
+@pytest.mark.parametrize("scaling_policy", ["usl", "usl_online"])
+def test_fast_replay_bit_identical_across_seeds(scaling_policy):
+    """8 seeds × both predictive policies: the fast replay's summary must
+    equal the scalar DES field-for-field — including every float."""
+    for seed in SEEDS:
+        exp = _cell(scaling_policy, seed)
+        fast, reason = try_fast_adaptation(AdaptationPlan(experiment=exp))
+        assert reason is None, f"seed {seed} unexpectedly fell back: {reason}"
+        assert fast.fast_path
+        scalar = summarize_adaptation(run_adaptation(exp))
+        for f in SUMMARY_FIELDS:
+            assert getattr(fast, f) == getattr(scalar, f), \
+                f"{scaling_policy} seed {seed}: {f} diverged " \
+                f"({getattr(fast, f)!r} != {getattr(scalar, f)!r})"
+
+
+def test_record_rows_identical_and_telemetry_excluded():
+    exp = _cell("usl", 3)
+    fast, _ = try_fast_adaptation(AdaptationPlan(experiment=exp))
+    scalar = summarize_adaptation(run_adaptation(exp))
+    assert fast.record() == scalar.record()
+    assert "fast_path" not in fast.record()
+
+
+@pytest.mark.parametrize("label,overrides,fragment", [
+    ("federated", dict(machine="federated",
+                       federation=dict(members=[dict(machine="serverless")])),
+     "federated"),
+    ("faulted", dict(faults=dict(stall_rate_hz=0.2, stall_s=5.0)),
+     "fault plan"),
+    ("threaded", dict(engine="threaded", threaded_service_s=0.02),
+     "threaded"),
+    ("hpc", dict(machine="wrangler", policy="update_locked"), "wrangler"),
+])
+def test_non_qualifying_cells_decline_with_reason(label, overrides, fragment):
+    exp = _cell("usl", 0, **overrides)
+    summary, reason = try_fast_adaptation(AdaptationPlan(experiment=exp))
+    assert summary is None
+    assert reason and fragment in reason
+
+
+def test_run_plan_falls_back_and_logs(caplog):
+    """`run_plan` on a non-qualifying cell must produce the scalar result,
+    stamp the fallback reason, and log it at INFO on the batched logger."""
+    exp = _cell("usl", 0, machine="wrangler", policy="update_locked",
+                horizon_s=40.0,
+                rate=dict(kind="step", base_hz=1.0, high_hz=3.0, t_step=20.0))
+    with caplog.at_level(logging.INFO, logger="repro.sim.batched"):
+        summary = run_plan(AdaptationPlan(experiment=exp, fast=True))
+    assert not summary.fast_path
+    assert summary.fallback_reason and "wrangler" in summary.fallback_reason
+    assert any("fast replay fallback" in r.message for r in caplog.records)
+    scalar = summarize_adaptation(run_adaptation(exp))
+    assert summary.record() == scalar.record()
+
+
+def test_fast_false_plan_skips_fast_path():
+    exp = _cell("usl", 0)
+    summary = run_plan(AdaptationPlan(experiment=exp, fast=False))
+    assert not summary.fast_path and summary.fallback_reason is None
+    assert summary.record() == \
+        summarize_adaptation(run_adaptation(exp)).record()
+
+
+# -- lockstep stepper ---------------------------------------------------------
+
+LOCK_CELL = dict(machine="serverless", scaling_policy="static",
+                 static_partitions=1, horizon_s=60.0,
+                 rate=dict(kind="step", base_hz=2.0, high_hz=4.0,
+                           t_step=30.0))
+
+
+def test_lockstep_eligibility_rules():
+    ok = AdaptationExperiment(seed=0, **LOCK_CELL)
+    assert lockstep_eligibility(ok) is None
+    scaled = dataclasses.replace(ok, scaling_policy="usl")
+    assert "static" in lockstep_eligibility(scaled)
+    wide = dataclasses.replace(ok, static_partitions=2)
+    assert "partition" in lockstep_eligibility(wide)
+    drifted = dataclasses.replace(ok, drift_t_s=20.0, drift_factor=2.0)
+    assert "drift" in lockstep_eligibility(drifted)
+    with pytest.raises(ValueError):
+        lockstep_completion_times(scaled, [0])
+
+
+def test_lockstep_matches_scalar_latency_within_rtol():
+    """S seeds in one vmap/scan vs S scalar DES runs: per-message pipeline
+    latency (finish - append) must agree on p50/p95 within the documented
+    float32 tolerance, for every seed."""
+    exp = AdaptationExperiment(seed=0, **LOCK_CELL)
+    finishes, appends = lockstep_completion_times(exp, list(SEEDS),
+                                                  with_appends=True)
+    assert finishes.shape == (len(SEEDS), len(appends))
+    # completion times are nondecreasing per seed (a FIFO chain)
+    assert np.all(np.diff(finishes, axis=1) >= 0)
+    for i, seed in enumerate(SEEDS):
+        res = run_adaptation(dataclasses.replace(exp, seed=seed))
+        lat = percentile_summary(list(finishes[i] - appends))
+        for q in ("p50", "p95"):
+            ref = res.latency_px[q]
+            assert abs(lat[q] - ref) <= LOCKSTEP_RTOL * ref, \
+                f"seed {seed} {q}: lockstep {lat[q]} vs scalar {ref}"
+
+
+def test_lockstep_seeds_match_scalar_jitter_stream():
+    """Seed s's column must consume exactly scalar seed s's normal draws:
+    distinct seeds give distinct chains, equal seeds identical ones."""
+    exp = AdaptationExperiment(seed=0, **LOCK_CELL)
+    a = lockstep_completion_times(exp, [0, 1, 0])
+    assert np.array_equal(a[0], a[2])
+    assert not np.array_equal(a[0], a[1])

@@ -274,3 +274,50 @@ def test_scenario_key_separates_policy_levels():
     assert len(models) == 2
     assert {m.key[4] for m in models} == {"full_fit_locked", "update_locked"}
     assert all(len(m.n) == 2 for m in models)
+
+
+def test_pool_survives_worker_kill_mid_grid():
+    """SIGKILL a pool worker while a forced-parallel adaptation grid is in
+    flight: ``run_cells`` must respawn the pool, re-run only the cells that
+    never landed, and return results bit-identical to a serial run."""
+    import os
+    import signal
+
+    import repro.core.streaminsight as si
+    from repro.core.miniapp import AdaptationExperiment, AdaptationPlan
+
+    cells = [AdaptationPlan(fast=False, experiment=AdaptationExperiment(
+        machine="serverless", scaling_policy="usl", seed=seed,
+        usl_sigma=0.0, usl_kappa=3.0e-4, usl_gamma=1.94,
+        horizon_s=90.0, max_partitions=8, slo_lag=32, control_interval_s=2.0,
+        stabilization_s=0.0, scale_down_hysteresis=0.08, headroom=0.0,
+        catchup_horizon_s=8.0, max_step_up=2,
+        drift_t_s=25.0, drift_factor=1.8,
+        rate=dict(kind="step", base_hz=2.0, high_hz=8.0, t_step=15.0,
+                  t_end=70.0))) for seed in range(8)]
+    serial = [r.record() for r in run_cells(cells, parallel=False)]
+
+    # warm the pool so a worker exists, then note the executor object
+    run_cells(cells[:2], parallel="force", max_workers=1)
+    old_pool = si._pool
+    assert old_pool is not None and old_pool._processes
+
+    state = {"killed": False, "landed": 0}
+
+    def kill_on_first_result(_exp, _res):
+        # fires in the parent as each chunk completes; with one worker and
+        # 4 chunks of 2, later chunks are still in flight at the first call
+        state["landed"] += 1
+        if not state["killed"]:
+            state["killed"] = True
+            for pid in list(si._pool._processes):
+                os.kill(pid, signal.SIGKILL)
+
+    pooled = run_cells(cells, parallel="force", max_workers=1,
+                       on_result=kill_on_first_result)
+    assert state["killed"]
+    assert state["landed"] == len(cells)      # completed cells not re-notified
+    # the broken executor was replaced, not resubmitted to
+    assert si._pool is not None and si._pool is not old_pool
+    assert [r.record() for r in pooled] == serial
+    si._reset_pool()

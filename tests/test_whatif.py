@@ -1,0 +1,167 @@
+"""The what-if engine: design expansion, dedupe, reducers, tournaments.
+
+The load-bearing claims: a ``Tournament`` simulates each *unique* cell
+exactly once however many coordinates and comparison questions read it,
+and the summaries it files are bit-identical to serial
+``run_adaptation`` on the same experiments.  The reducers
+(``sign_test``, ``pareto_frontier``, win matrices) are checked against
+hand-computed values.
+"""
+
+from __future__ import annotations
+
+from repro.core.miniapp import run_adaptation, summarize_adaptation
+from repro.core.streaminsight import cache_key
+from repro.core.whatif import (Tournament, WhatIfDesign, pareto_frontier,
+                               sign_test)
+
+# a cheap qualifying serverless drift cell — seconds per seed, fast path
+BASE = dict(
+    machine="serverless", usl_sigma=0.0, usl_kappa=3.0e-4, usl_gamma=1.94,
+    horizon_s=60.0, max_partitions=8, slo_lag=32, control_interval_s=2.0,
+    stabilization_s=0.0, scale_down_hysteresis=0.08, headroom=0.0,
+    catchup_horizon_s=8.0, refit_interval_s=5.0, max_step_up=2,
+    rate=dict(kind="step", base_hz=2.0, high_hz=8.0, t_step=15.0,
+              t_end=45.0))
+
+DRIFT = dict(name="drift", drift_t_s=20.0, drift_factor=1.8,
+             refit_half_life_s=25.0)
+
+
+# -- expansion ----------------------------------------------------------------
+
+def test_policy_hypergrid_expansion():
+    d = WhatIfDesign(policies=[dict(name="usl", headroom=[0.0, 0.1],
+                                    max_step_up=[1, 2])])
+    variants = d.policy_variants()
+    assert [n for n, _ in variants] == [
+        "usl[headroom=0,max_step_up=1]", "usl[headroom=0,max_step_up=2]",
+        "usl[headroom=0.1,max_step_up=1]", "usl[headroom=0.1,max_step_up=2]"]
+    for _name, spec in variants:
+        assert spec["scaling_policy"] == "usl"
+        assert not any(isinstance(v, (list, tuple)) for v in spec.values())
+
+
+def test_plans_cross_product_and_precedence():
+    d = WhatIfDesign(base=dict(BASE, headroom=0.3),
+                     scenarios=[dict(DRIFT), dict(name="calm")],
+                     policies=["usl", dict(name="tuned",
+                                           scaling_policy="usl",
+                                           headroom=0.1)],
+                     seeds=[0, 1, 2])
+    plans = d.plans()
+    assert len(plans) == 2 * 2 * 3
+    byc = dict(plans)
+    # scenario overrides land only in its cells
+    assert byc[("drift", "usl", 0)].experiment.drift_t_s == 20.0
+    assert byc[("calm", "usl", 0)].experiment.drift_t_s is None
+    # policy overrides beat base
+    assert byc[("calm", "tuned", 1)].experiment.headroom == 0.1
+    assert byc[("calm", "usl", 1)].experiment.headroom == 0.3
+    assert byc[("drift", "tuned", 2)].experiment.seed == 2
+
+
+def test_naive_question_cells_shape():
+    d = WhatIfDesign(base=dict(BASE), scenarios=[dict(DRIFT)],
+                     policies=["usl", "usl_online"], seeds=list(range(8)))
+    blocks = dict(d.naive_question_cells())
+    assert len(blocks["violations"]) == 16
+    assert len(blocks["cost"]) == 16
+    assert len(blocks["drain"]) == 16
+    # refit-activity reads only online-policy coords
+    assert len(blocks["refit-activity"]) == 8
+    assert all("usl_online" in c[1] for c in blocks["refit-activity"])
+    assert len(blocks["pareto:drift"]) == 16
+    assert len(blocks["win:usl>usl_online"]) == 16
+    assert len(blocks["win:usl_online>usl"]) == 16
+    # total naive cell-runs vs 16 unique plans: the dedupe headroom
+    assert sum(len(v) for v in blocks.values()) == 104
+
+
+# -- reducers -----------------------------------------------------------------
+
+def test_sign_test_exact_values():
+    assert sign_test(0, 0) == 1.0
+    assert sign_test(2, 2) == 1.0
+    assert sign_test(8, 0) == 2.0 / 256.0          # 0.0078125
+    assert sign_test(0, 8) == sign_test(8, 0)
+    assert sign_test(5, 1) == 0.21875
+    assert abs(sign_test(1, 1) - 1.0) < 1e-12
+
+
+def test_pareto_frontier_flags():
+    #      frontier      dominated       frontier      dominated (tie+worse)
+    pts = [(0.0, 10.0), (1.0, 11.0), (2.0, 1.0), (2.0, 2.0)]
+    assert pareto_frontier(pts) == [True, False, True, False]
+    assert pareto_frontier([]) == []
+    # exact duplicates don't dominate each other
+    assert pareto_frontier([(1.0, 1.0), (1.0, 1.0)]) == [True, True]
+
+
+# -- tournament ---------------------------------------------------------------
+
+def _design(seeds=(0, 1)):
+    return WhatIfDesign(base=dict(BASE), scenarios=[dict(DRIFT)],
+                        policies=["usl", "usl_online"], seeds=list(seeds))
+
+
+def test_tournament_dedupes_shared_cells():
+    d = _design()
+    # the same scenario listed twice under two names: every cell is shared
+    d.scenarios = [dict(DRIFT), dict(DRIFT, name="drift-again")]
+    t = Tournament(d, parallel=False).run()
+    assert t.total_cells == 8
+    assert t.unique_cells == 4
+    assert t.fast_cells == 4
+    assert not t.fallbacks
+    # the two coordinates share one summary object — that IS the dedupe
+    assert t.summaries[("drift", "usl", 0)] is \
+        t.summaries[("drift-again", "usl", 0)]
+
+
+def test_cache_key_ignores_fast_flag():
+    d = _design(seeds=(0,))
+    fast_keys = [cache_key(p) for _c, p in d.plans()]
+    d.fast = False
+    slow_keys = [cache_key(p) for _c, p in d.plans()]
+    assert fast_keys == slow_keys
+
+
+def test_tournament_bit_identical_to_serial_run_adaptation():
+    t = Tournament(_design(), parallel=False).run()
+    for (sc, pol, seed), plan in _design().plans():
+        ref = summarize_adaptation(run_adaptation(plan.experiment),
+                                   plan=plan)
+        assert t.summaries[(sc, pol, seed)].record() == ref.record(), \
+            f"({sc},{pol},{seed}) diverged from serial run_adaptation"
+
+
+def test_tournament_reducers_and_rows():
+    t = Tournament(_design(), parallel=False).run()
+    rows = t.pareto["drift"]
+    assert [r["policy"] for r in rows] == ["usl", "usl_online"]
+    assert all(r["seeds"] == 2 for r in rows)
+    assert any(r["frontier"] for r in rows)
+    w = t.wins[("usl_online", "usl")]
+    assert w["wins"] + w["losses"] + w["ties"] == 2
+    assert 0.0 < w["p_value"] <= 1.0
+    flat = t.summary_rows()
+    assert len(flat) == 4
+    assert {r["scenario"] for r in flat} == {"drift"}
+    assert {(r["policy_name"], r["seed"]) for r in flat} == \
+        {("usl", 0), ("usl", 1), ("usl_online", 0), ("usl_online", 1)}
+    assert all("slo_violations" in r and "cost_integral" in r for r in flat)
+
+
+def test_tournament_records_fallbacks_per_coordinate():
+    d = WhatIfDesign(
+        base=dict(machine="wrangler", policy="update_locked",
+                  usl_sigma=0.0, usl_kappa=3.0e-4, usl_gamma=1.94,
+                  horizon_s=30.0,
+                  rate=dict(kind="step", base_hz=1.0, high_hz=2.0,
+                            t_step=15.0)),
+        scenarios=[dict(name="hpc")], policies=["usl"], seeds=[0])
+    t = Tournament(d, parallel=False).run()
+    assert t.fast_cells == 0
+    assert set(t.fallbacks) == {("hpc", "usl", 0)}
+    assert "wrangler" in t.fallbacks[("hpc", "usl", 0)]
