@@ -130,7 +130,8 @@ DRIFT_SCENARIOS = {
 
 DRIFT_COST_PARITY_X = 1.08
 # the drift claims are per-seed across this grid (the what-if engine makes
-# an 8-seed × 2-policy grid cheap: serverless cells take the fast replay)
+# an 8-seed × 2-policy grid cheap: both the serverless cells and the
+# wrangler coupling-chain cells take the fast replay)
 DRIFT_SEEDS = tuple(range(8))
 
 # fault-trace cells: the predictive-vs-reactive edge must survive failure
@@ -224,8 +225,8 @@ def _tournament_note(label: str, t: TournamentResult) -> None:
 
 def run_baseline_cells(machine: str, si: StreamInsight, s: dict,
                        usl_peak_n: float) -> list[dict]:
-    """The 4-trace × 3-policy grid, one tournament (fast replay on
-    serverless, scalar DES on wrangler — same call)."""
+    """The 4-trace × 3-policy grid, one tournament — every cell on the
+    fast replay (serverless pools and wrangler coupling chains alike)."""
     design = WhatIfDesign(
         base=dict(machine=machine, policy=s["policy"], horizon_s=120.0,
                   max_partitions=16, slo_lag=32),
@@ -234,6 +235,8 @@ def run_baseline_cells(machine: str, si: StreamInsight, s: dict,
         seeds=[0])
     t = Tournament(design).run()
     _tournament_note(f"{machine} baseline", t)
+    assert not t.fallbacks, \
+        f"{machine} baseline grid fell back to the scalar DES: {t.fallbacks}"
     rows = []
     for (rate_name, _pol, seed), summary in sorted(t.summaries.items()):
         row = _base_row(machine, rate_name, summary, seed)
@@ -259,6 +262,8 @@ def run_drift_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
         seeds=list(DRIFT_SEEDS))
     t = Tournament(design).run()
     _tournament_note(f"{machine} drift", t)
+    assert not t.fallbacks, \
+        f"{machine} drift grid fell back to the scalar DES: {t.fallbacks}"
     return [_base_row(machine, rate_name, summary, seed)
             for (rate_name, _pol, seed), summary in sorted(t.summaries.items())]
 
@@ -287,6 +292,8 @@ def run_fault_cells(machine: str, si: StreamInsight, s: dict) -> list[dict]:
         seeds=list(FAULT_SEEDS))
     t = Tournament(design).run()
     _tournament_note(f"{machine} faults", t)
+    assert not t.fallbacks, \
+        f"{machine} fault grid fell back to the scalar DES: {t.fallbacks}"
     return [_fault_row(machine, rate_name, summary, seed)
             for (rate_name, _pol, seed), summary in sorted(t.summaries.items())]
 

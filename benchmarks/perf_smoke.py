@@ -73,8 +73,15 @@ The what-if engine writes ``BENCH_whatif.json``:
   re-simulating its cells through the scalar DES).
 * ``whatif bit_identical`` — tournament summaries must equal serial
   per-cell ``run_adaptation`` exactly on a 3-cell spot check.
-* ``whatif fallbacks`` — federation / stall-fault / threaded cells must
-  decline the fast path with a log-visible reason.
+* ``whatif fallbacks`` — federation / threaded cells must decline the
+  fast path with a log-visible reason.
+* ``whatif fault_grid_fast`` / ``wrangler_grid_fast`` — fig8-shaped
+  fault-plan and wrangler (HPC coupling) tournament grids must run with
+  ZERO fallbacks, every unique cell on the fast replay, and match a
+  serial scalar rerun bit-for-bit on each grid's first coordinate.
+* ``whatif grid_vmap_x`` — the cross-cell vmapped seed grid (one
+  reference replay + one jitted scan over all seeds) must beat per-seed
+  sequential fast replays by ≥3x.
 * ``whatif lockstep_sim`` — the lockstep stepper's per-sim wall vs the
   scalar DES on a qualifying static cell (informational).
 
@@ -184,11 +191,16 @@ FEDERATION_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_federation.js
 # the scalar DES.  The tournament answers the same questions from one
 # deduped pass over the unique cells on the vectorized fast replay, and
 # must be >=10x faster; summaries must match serial ``run_adaptation``
-# bit-for-bit on a 3-cell spot check.  Non-qualifying cells (federation,
-# stall faults, threaded engine) must decline the fast path with a
-# log-visible reason.  The lockstep stepper's per-sim wall vs the scalar
-# DES rides along as an informational row.
+# bit-for-bit on a 3-cell spot check.  Still-non-qualifying cells
+# (federation, threaded engine) must decline the fast path with a
+# log-visible reason — and the newly-eligible shapes must NOT: fig8-shaped
+# fault and wrangler tournament grids are gated to finish with zero
+# fallbacks, each with its own scalar bit-identity spot check, and the
+# cross-cell vmapped seed grid must beat per-seed sequential fast replays
+# by >=GRID_VMAP_GATE_X.  The lockstep stepper's per-sim wall vs the
+# scalar DES rides along as an informational row.
 WHATIF_SPEEDUP_GATE_X = 10.0
+GRID_VMAP_GATE_X = 3.0
 WHATIF_SEEDS = tuple(range(8))
 WHATIF_DRIFT_CELL = dict(
     machine="serverless", horizon_s=150.0, max_partitions=16, slo_lag=32,
@@ -199,6 +211,22 @@ WHATIF_DRIFT_CELL = dict(
               t_end=120.0))
 WHATIF_SPOT_COORDS = [("drift", "usl", 0), ("drift", "usl_online", 0),
                       ("drift", "usl", 5)]
+# the newly-eligible grid shapes, miniaturized from fig8's fault and
+# wrangler sections (same structure — fault plan axes, the update_locked
+# coupling policy — at a 4-seed, shorter-horizon scale)
+WHATIF_GRID_SEEDS = tuple(range(4))
+WHATIF_FAULT_CELL = dict(
+    machine="serverless", horizon_s=90.0, max_partitions=16, slo_lag=48,
+    max_retries=5, retry_backoff_s=0.1,
+    rate=dict(kind="step", base_hz=2.0, high_hz=10.0, t_step=30.0),
+    faults=dict(crash_rate_hz=0.03, duplicate_rate_hz=0.015,
+                preempt_times=[35.0, 60.0], preempt_count=3))
+WHATIF_WRANGLER_CELL = dict(
+    machine="wrangler", policy="update_locked", horizon_s=90.0,
+    max_partitions=16, slo_lag=32, control_interval_s=2.0,
+    drift_t_s=40.0, drift_factor=0.25, refit_half_life_s=30.0,
+    refit_interval_s=5.0,
+    rate=dict(kind="step", base_hz=1.0, high_hz=6.0, t_step=50.0))
 WHATIF_OUT_PATH = Path(__file__).resolve().parents[1] / "BENCH_whatif.json"
 
 # -- simlint (informational) --------------------------------------------------
@@ -629,9 +657,12 @@ def _whatif_design():
 def run_whatif() -> dict:
     """Tournament-vs-naive on the fig8 drift grid, bit-identity spot
     check, fast-path refusals, and the lockstep stepper's per-sim wall."""
+    from dataclasses import replace
+
     from repro.core.miniapp import (AdaptationPlan, summarize_adaptation)
-    from repro.core.whatif import Tournament
-    from repro.sim.batched import (lockstep_completion_times,
+    from repro.core.whatif import Tournament, WhatIfDesign
+    from repro.sim.batched import (grid_lockstep_completion_times,
+                                   lockstep_completion_times,
                                    lockstep_eligibility, try_fast_adaptation)
 
     design = _whatif_design()
@@ -669,13 +700,14 @@ def run_whatif() -> dict:
                                       plan=plans[coord])
         spot_matches += \
             serial.record() == result.summaries[coord].record()
-    # fast-path refusals: each non-qualifying shape must decline with a
-    # reason (try_fast_adaptation returns (None, reason) without running
-    # the scalar fallback)
+    # fast-path refusals: each still-non-qualifying shape must decline
+    # with a reason (try_fast_adaptation returns (None, reason) without
+    # running the scalar fallback).  Fault plans and wrangler cells left
+    # this list when the replay learned to splice fault schedules and run
+    # the HPC coupling chain — they are gated the other way below.
     decline_shapes = {
         "federation": dict(machine="federated",
                            federation=dict(members=[dict(machine="serverless")])),
-        "stall_faults": dict(faults=dict(stall_rate_hz=0.2, stall_s=5.0)),
         "threaded": dict(engine="threaded", threaded_service_s=0.02),
     }
     refusals = {}
@@ -684,6 +716,55 @@ def run_whatif() -> dict:
                                       **ADAPT_USL_PARAMS, **overrides})
         summary, reason = try_fast_adaptation(AdaptationPlan(experiment=exp))
         refusals[label] = {"declined": summary is None, "reason": reason}
+    # the newly-eligible grids: fig8-shaped fault and wrangler tournaments
+    # must finish with ZERO fallbacks (every unique cell on the fast
+    # replay) and each grid's first coordinate must match a serial scalar
+    # rerun bit-for-bit
+    grids = {}
+    for grid_label, cell, policies in (
+            ("fault_grid", WHATIF_FAULT_CELL, ["usl", "reactive"]),
+            ("wrangler_grid", WHATIF_WRANGLER_CELL, ["usl", "usl_online"])):
+        gdesign = WhatIfDesign(
+            base=dict(**cell, **ADAPT_USL_PARAMS),
+            scenarios=[dict(name=grid_label)],
+            policies=list(policies),
+            seeds=list(WHATIF_GRID_SEEDS))
+        gresult = Tournament(gdesign, parallel=False, cache=None).run()
+        gplans = dict(gdesign.plans())
+        spot = (grid_label, policies[0], WHATIF_GRID_SEEDS[0])
+        serial = summarize_adaptation(run_adaptation(gplans[spot].experiment),
+                                      plan=gplans[spot])
+        grids[grid_label] = {
+            "unique_cells": gresult.unique_cells,
+            "fast_cells": gresult.fast_cells,
+            "fallbacks": len(gresult.fallbacks),
+            "spot_identical":
+                serial.record() == gresult.summaries[spot].record(),
+        }
+    # cross-cell vmap: S seeds of the drift cell as ONE vmapped grid scan
+    # (reference replay + jitted double recurrence) vs S sequential
+    # bit-exact replays of the same cell
+    grid_exp = AdaptationExperiment(
+        scaling_policy="usl", seed=WHATIF_SEEDS[0],
+        **{**WHATIF_DRIFT_CELL, **ADAPT_USL_PARAMS})
+    grid_lockstep_completion_times(grid_exp, list(WHATIF_SEEDS))   # warm jit
+    wall_grid = _best_wall(
+        lambda: grid_lockstep_completion_times(grid_exp, list(WHATIF_SEEDS)),
+        repeats=3)
+
+    def _sequential_replays():
+        for s in WHATIF_SEEDS:
+            plan = AdaptationPlan(experiment=replace(grid_exp, seed=s))
+            summary, reason = try_fast_adaptation(plan)
+            assert reason is None, reason
+
+    wall_grid_seq = _best_wall(_sequential_replays, repeats=3)
+    grid_vmap = {
+        "seeds": len(WHATIF_SEEDS),
+        "wall_vmap_s": round(wall_grid, 4),
+        "wall_sequential_s": round(wall_grid_seq, 4),
+        "speedup_x": round(wall_grid_seq / max(wall_grid, 1e-9), 1),
+    }
     # lockstep stepper (informational): per-sim wall across the seed axis
     # vs one scalar DES run of the same qualifying static cell
     lock_exp = AdaptationExperiment(
@@ -710,6 +791,8 @@ def run_whatif() -> dict:
         "spot_checked": len(WHATIF_SPOT_COORDS),
         "spot_matches": spot_matches,
         "refusals": refusals,
+        "grids": grids,
+        "grid_vmap": grid_vmap,
         "lockstep": {"eligible": lock_reason is None,
                      "wall_batch_s": round(wall_lock, 4),
                      "per_sim_s": round(wall_lock / len(WHATIF_SEEDS), 5),
@@ -738,6 +821,15 @@ def whatif_gates(report: dict) -> list[tuple[str, str, str, str, str, bool]]:
          f"{sum(r['declined'] and bool(r['reason']) for r in refusals.values())}"
          f"/{len(refusals)}", "all",
          all(r["declined"] and r["reason"] for r in refusals.values())),
+        *[("whatif", f"{label}_fast", str(g["unique_cells"]),
+           f"{g['fast_cells']} fast/{g['fallbacks']} fb",
+           "0 fallbacks+spot",
+           g["fallbacks"] == 0 and g["fast_cells"] == g["unique_cells"]
+           and g["spot_identical"])
+          for label, g in report["grids"].items()],
+        ("whatif", "grid_vmap_x", f"{report['grid_vmap']['wall_sequential_s']:g}s",
+         f"{report['grid_vmap']['speedup_x']:g}", f">={GRID_VMAP_GATE_X:g}x",
+         report["grid_vmap"]["speedup_x"] >= GRID_VMAP_GATE_X),
         ("whatif", "lockstep_sim", f"{lock['scalar_des_s']:g}",
          f"{lock['per_sim_s']:g}", "info", True),
     ]

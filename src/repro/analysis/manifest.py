@@ -37,6 +37,16 @@ that only *calls* locked machinery is not a new lock site.  Had it added
 one (say a results-accumulator lock fed from pool callbacks), the entry's
 note would state it is leaf: acquired after, never while holding, the
 pool lock.
+
+Second worked example — widening the fast replay (``sim/batched.py``):
+teaching the replay fault-plan splicing, HPC coupling chains and straggler
+speculation tripled the module's surface but changed nothing here.  The
+new code is pure event-loop machinery over ``sim.des`` (no wall-clock, no
+RNG outside the seeded ``Simulator`` streams, no locks), so the existing
+``*/repro/sim/*.py`` glob already covers it and neither ``known_locks``
+nor a pragma was needed.  Growth that stays inside an existing glob with
+zero new findings is the manifest working as designed — the gate only
+moves when the *concurrency story* changes, not when code volume does.
 """
 
 from __future__ import annotations

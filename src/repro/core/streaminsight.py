@@ -267,7 +267,12 @@ def cache_key(exp) -> str:
     ``AdaptationPlan.fast`` is an execution *hint* (the fast replay is
     bit-identical to the scalar DES by contract), so it is excluded: a
     plan's summary is the same value however it was computed, and the
-    what-if dedupe in ``core.whatif`` keys on this too."""
+    what-if dedupe in ``core.whatif`` keys on this too.  That contract
+    now spans fault-plan cells and the wrangler/stampede2 coupling
+    chains (``sim.batched``), so cache entries written by either path
+    stay interchangeable across all of them — only the replay's
+    *declining* shapes (threaded engine, federation) are ever scalar-only,
+    and they hash identically regardless."""
     payload_dict = dataclasses.asdict(exp)
     if type(exp).__name__ == "AdaptationPlan":
         payload_dict.pop("fast", None)

@@ -255,27 +255,51 @@ class Tournament:
 
     # -- reducers ------------------------------------------------------------
     def _pareto(self, summaries: dict) -> dict:
+        """Per-scenario policy rows with non-domination flags.
+
+        Distinct policy names whose plans deduped to the *same* physical
+        cells (``summaries`` maps their coordinates to the same summary
+        objects) would produce coordinate-identical rows — and
+        ``pareto_frontier`` flags exact duplicates as mutually
+        non-dominated, so one simulated cell could occupy two frontier
+        slots under two names.  Such rows are annotated
+        ``duplicate_of: <representative policy>`` and excluded from the
+        frontier computation; they inherit the representative's flag."""
         out: dict[str, list[dict]] = {}
         for sc_name, _sc in self.design.scenario_specs():
             rows = []
+            seen: dict[tuple, str] = {}   # cell identity -> first policy name
             for pol_name, _spec in self.design.policy_variants():
                 cells = [summaries[(sc_name, pol_name, s)]
                          for s in self.design.seeds
                          if (sc_name, pol_name, s) in summaries]
                 if not cells:
                     continue
-                rows.append({
+                row = {
                     "policy": pol_name,
                     "mean_violations":
                         sum(c.slo_violations for c in cells) / len(cells),
                     "mean_cost":
                         sum(c.cost_integral for c in cells) / len(cells),
                     "seeds": len(cells),
-                })
+                }
+                ident = tuple(id(c) for c in cells)
+                rep = seen.get(ident)
+                if rep is not None:
+                    row["duplicate_of"] = rep
+                else:
+                    seen[ident] = pol_name
+                rows.append(row)
+            originals = [r for r in rows if "duplicate_of" not in r]
             flags = pareto_frontier(
-                [(r["mean_violations"], r["mean_cost"]) for r in rows])
-            for r, on_frontier in zip(rows, flags):
+                [(r["mean_violations"], r["mean_cost"]) for r in originals])
+            rep_frontier = {}
+            for r, on_frontier in zip(originals, flags):
                 r["frontier"] = on_frontier
+                rep_frontier[r["policy"]] = on_frontier
+            for r in rows:
+                if "duplicate_of" in r:
+                    r["frontier"] = rep_frontier[r["duplicate_of"]]
             out[sc_name] = rows
         return out
 

@@ -65,6 +65,57 @@ DEFAULTS = dict(
 _Z95 = 1.6448536269514722   # standard-normal 95th percentile
 
 
+def coupling_terms(cfg: dict, profile: TaskProfile) -> tuple[float, float, float, float]:
+    """The per-task coupling terms of the processor-sharing model, as a
+    pure function of ``(cfg, profile)``.
+
+    Returns ``(arrival_io_bytes, compute_mean_s, critical_mean_s,
+    write_io_bytes)`` — exactly the four quantities the ``_TaskExec``
+    phase chain feeds into the shared filesystem and the model lock:
+
+    * ``arrival_io_bytes`` — message pull + model read on the shared FS,
+    * ``compute_mean_s`` — the parallel distance phase (private cores),
+    * ``critical_mean_s`` — the model-merge critical section: per-peer
+      metadata opens plus the serial merge (the sigma/kappa source),
+    * ``write_io_bytes`` — model write-back plus the (N-1)-growing
+      coherence delta traffic, all riding the shared FS.
+
+    The backend's task chain and the fast replay (``sim.batched``) both
+    consume this function, so the coupled service-time chain the replay
+    builds is bit-identical to the scalar DES by construction.
+    """
+    n_peers = profile.coherence_peers
+    arrival_io = profile.msg_bytes + profile.read_bytes
+    compute_mean = profile.flops / cfg["flops_per_core"]
+    critical_mean = (n_peers * cfg["fs_meta_latency"]
+                     + profile.serial_flops / cfg["flops_per_core"])
+    write_io = profile.write_bytes + (n_peers * max(profile.write_bytes, 1.0)
+                                      * cfg["coherence_delta_frac"])
+    return arrival_io, compute_mean, critical_mean, write_io
+
+
+def queue_wait_sample(cfg: dict, rng: np.random.Generator) -> float:
+    """One batch-queue wait sample, seconds — pure given ``(cfg, rng)``.
+
+    Default: degenerate at ``grant_delay_s`` — the flat calibrated wait.
+    Setting ``queue_wait_p50_s``/``queue_wait_p95_s`` switches to the
+    seeded log-normal those quantiles imply (mu = ln p50, sigma =
+    ln(p95/p50)/z95) — the empirical heavy-tailed batch-queue shape.
+    The backend and the fast replay draw from identically-seeded
+    per-pilot streams (``default_rng([seed, uid])``), so grant schedules
+    match bit-for-bit.
+    """
+    p50 = cfg.get("queue_wait_p50_s")
+    if p50 is None:
+        p50 = cfg["grant_delay_s"]
+    p95 = cfg.get("queue_wait_p95_s")
+    if p95 is None or p50 <= 0.0 or p95 <= p50:
+        return float(p50)
+    mu = math.log(p50)
+    sigma = math.log(p95 / p50) / _Z95
+    return float(rng.lognormal(mu, sigma))
+
+
 @dataclass
 class _Worker:
     wid: int
@@ -110,24 +161,10 @@ class HpcSimBackend(Backend):
         pilot.state = State.RUNNING
 
     def _queue_wait(self, st: dict) -> float:
-        """One batch-queue wait sample, seconds.
-
-        Default: degenerate at ``grant_delay_s`` — the flat calibrated
-        wait.  Setting ``queue_wait_p50_s``/``queue_wait_p95_s`` switches
-        to the seeded log-normal those quantiles imply (mu = ln p50,
-        sigma = ln(p95/p50)/z95) — the empirical heavy-tailed batch-queue
-        shape, closing the ROADMAP's flat-grant-delay calibration item.
-        """
-        cfg = st["cfg"]
-        p50 = cfg.get("queue_wait_p50_s")
-        if p50 is None:
-            p50 = cfg["grant_delay_s"]
-        p95 = cfg.get("queue_wait_p95_s")
-        if p95 is None or p50 <= 0.0 or p95 <= p50:
-            return float(p50)
-        mu = math.log(p50)
-        sigma = math.log(p95 / p50) / _Z95
-        return float(st["queue_rng"].lognormal(mu, sigma))
+        """One batch-queue wait sample from the pilot's dedicated stream
+        (see ``queue_wait_sample`` — the pure sampler shared with the
+        fast replay)."""
+        return queue_wait_sample(st["cfg"], st["queue_rng"])
 
     # -- elasticity ----------------------------------------------------------
     def _mapping(self, st: dict) -> list[_Worker]:
@@ -349,7 +386,7 @@ class HpcSimBackend(Backend):
         #          FS), merge (serial_flops), write back, release.
         #          Constant lock-hold → sigma; (N-1)-growing hold → kappa.
         task = _TaskExec(self, pilot, w, cu, st)
-        st["fs"].submit(task.p.msg_bytes + task.p.read_bytes, task.phase_compute)
+        st["fs"].submit(task.arrival_io, task.phase_compute)
 
     def drive_until(self, predicate, timeout) -> None:
         self.sim.run_until(t=None if timeout is None else self.sim.now + timeout,
@@ -363,8 +400,8 @@ class _TaskExec:
     continuations instead of a fresh stack of closures per task (the
     mini-app pushes hundreds of tasks per cell through this path)."""
 
-    __slots__ = ("backend", "pilot", "w", "cu", "st", "cfg", "p", "n_peers",
-                 "coher_bytes")
+    __slots__ = ("backend", "pilot", "w", "cu", "st", "cfg",
+                 "arrival_io", "compute_mean", "critical_mean", "write_io")
 
     def __init__(self, backend: HpcSimBackend, pilot: Pilot, w: _Worker,
                  cu: ComputeUnit, st: dict) -> None:
@@ -374,15 +411,14 @@ class _TaskExec:
         self.cu = cu
         self.st = st
         self.cfg = st["cfg"]
-        self.p = cu.desc.profile or TaskProfile()
-        self.n_peers = self.p.coherence_peers
-        self.coher_bytes = (self.n_peers * max(self.p.write_bytes, 1.0)
-                            * self.cfg["coherence_delta_frac"])
+        p = cu.desc.profile or TaskProfile()
+        (self.arrival_io, self.compute_mean,
+         self.critical_mean, self.write_io) = coupling_terms(self.cfg, p)
 
     def phase_compute(self) -> None:
         sim = self.backend.sim
-        t = self.p.flops / self.cfg["flops_per_core"]
-        sim.schedule_fast(sim.lognormal_jitter(t, self.cfg["jitter_cv"]),
+        sim.schedule_fast(sim.lognormal_jitter(self.compute_mean,
+                                               self.cfg["jitter_cv"]),
                           self.phase_model_update)
 
     def phase_model_update(self) -> None:
@@ -390,14 +426,12 @@ class _TaskExec:
 
     def in_critical_section(self) -> None:
         sim = self.backend.sim
-        meta = self.n_peers * self.cfg["fs_meta_latency"]
-        merge = self.p.serial_flops / self.cfg["flops_per_core"]
-        sim.schedule_fast(sim.lognormal_jitter(meta + merge,
+        sim.schedule_fast(sim.lognormal_jitter(self.critical_mean,
                                                self.cfg["jitter_cv"]),
                           self.do_io)
 
     def do_io(self) -> None:
-        self.st["fs"].submit(self.p.write_bytes + self.coher_bytes, self.unlock)
+        self.st["fs"].submit(self.write_io, self.unlock)
 
     def unlock(self) -> None:
         self.st["model_lock"].release()

@@ -50,7 +50,8 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["FaultEvent", "FaultPlan", "FaultInjector", "FAULT_KINDS"]
+__all__ = ["FaultEvent", "FaultPlan", "FaultInjector", "FAULT_KINDS",
+           "expand_plan"]
 
 FAULT_KINDS = ("crash", "stall", "duplicate", "preempt",
                "backend_outage", "grant_starvation")
@@ -175,6 +176,31 @@ class FaultPlan:
         out.extend(self.events)
         # (t, kind) sort: ties resolve identically on every run
         return sorted(out, key=lambda e: (e.t, e.kind, e.count))
+
+
+def expand_plan(spec, *, default_seed: int = 0,
+                default_horizon_s: float = 120.0) -> tuple["FaultPlan", list[FaultEvent]]:
+    """Pre-expand a fault plan spec into ``(plan, events)``.
+
+    This is the plan-side contract the fast replay (``sim.batched``)
+    depends on: the entire fault schedule is known *before* the run
+    starts — rates expand through one ``default_rng(plan.seed)`` stream
+    at plan time, never at fire time — so a replay can arm the exact
+    event list the scalar ``FaultInjector`` would arm, in the same
+    order, without constructing an injector at all.
+
+    ``spec`` is a JSON-able plan dict (see module docstring) or an
+    already-built ``FaultPlan``; defaults mirror ``miniapp``'s wiring
+    (``default_seed`` = experiment seed, ``default_horizon_s`` =
+    experiment horizon).  The returned event list is exactly
+    ``plan.events_for()`` — time-sorted with deterministic ties.
+    """
+    if isinstance(spec, FaultPlan):
+        plan = spec
+    else:
+        plan = FaultPlan.from_spec(spec, default_seed=default_seed,
+                                   default_horizon_s=default_horizon_s)
+    return plan, plan.events_for()
 
 
 class FaultInjector:

@@ -10,6 +10,11 @@ hand-computed values.
 
 from __future__ import annotations
 
+from types import SimpleNamespace
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
 from repro.core.miniapp import run_adaptation, summarize_adaptation
 from repro.core.streaminsight import cache_key
 from repro.core.whatif import (Tournament, WhatIfDesign, pareto_frontier,
@@ -155,13 +160,61 @@ def test_tournament_reducers_and_rows():
 
 def test_tournament_records_fallbacks_per_coordinate():
     d = WhatIfDesign(
-        base=dict(machine="wrangler", policy="update_locked",
-                  usl_sigma=0.0, usl_kappa=3.0e-4, usl_gamma=1.94,
-                  horizon_s=30.0,
-                  rate=dict(kind="step", base_hz=1.0, high_hz=2.0,
-                            t_step=15.0)),
-        scenarios=[dict(name="hpc")], policies=["usl"], seeds=[0])
+        base=dict(BASE, engine="threaded", threaded_service_s=0.02,
+                  horizon_s=30.0),
+        scenarios=[dict(name="thr")], policies=["usl"], seeds=[0])
     t = Tournament(d, parallel=False).run()
     assert t.fast_cells == 0
-    assert set(t.fallbacks) == {("hpc", "usl", 0)}
-    assert "wrangler" in t.fallbacks[("hpc", "usl", 0)]
+    assert set(t.fallbacks) == {("thr", "usl", 0)}
+    assert "threaded" in t.fallbacks[("thr", "usl", 0)]
+
+
+def test_pareto_annotates_duplicate_policy_rows():
+    """Two policy names that dedupe to the same physical cells must not
+    occupy two frontier slots: the later name is annotated `duplicate_of`
+    its representative, inherits the representative's flag, and only the
+    representative enters the frontier computation."""
+    d = _design()
+    d.policies = ["usl", dict(name="usl-again", scaling_policy="usl"),
+                  "usl_online"]
+    t = Tournament(d, parallel=False).run()
+    rows = {r["policy"]: r for r in t.pareto["drift"]}
+    assert t.summaries[("drift", "usl", 0)] is \
+        t.summaries[("drift", "usl-again", 0)]
+    assert "duplicate_of" not in rows["usl"]
+    assert "duplicate_of" not in rows["usl_online"]
+    assert rows["usl-again"]["duplicate_of"] == "usl"
+    assert rows["usl-again"]["frontier"] == rows["usl"]["frontier"]
+    originals = [r for r in t.pareto["drift"] if "duplicate_of" not in r]
+    flags = pareto_frontier(
+        [(r["mean_violations"], r["mean_cost"]) for r in originals])
+    assert [r["frontier"] for r in originals] == flags
+
+
+@given(outcomes=st.lists(st.sampled_from(["win", "loss", "tie"]),
+                         min_size=1, max_size=12))
+@settings(max_examples=25, deadline=None)
+def test_wins_matrix_excludes_ties_from_sign_test(outcomes):
+    """Property at the `_wins` call site: the reported p-value is the
+    exact sign test over wins/losses only — ties are counted but never
+    enter the binomial."""
+    d = WhatIfDesign(base=dict(BASE), scenarios=[dict(name="s")],
+                     policies=[dict(name="a", scaling_policy="usl"),
+                               dict(name="b", scaling_policy="usl")],
+                     seeds=list(range(len(outcomes))))
+    summaries = {}
+    for seed, o in enumerate(outcomes):
+        ka = (0, 1.0) if o == "win" else (0, 3.0) if o == "loss" else (0, 2.0)
+        summaries[("s", "a", seed)] = SimpleNamespace(
+            slo_violations=ka[0], cost_integral=ka[1])
+        summaries[("s", "b", seed)] = SimpleNamespace(
+            slo_violations=0, cost_integral=2.0)
+    w = Tournament(d, parallel=False)._wins(summaries)[("a", "b")]
+    assert w["wins"] == outcomes.count("win")
+    assert w["losses"] == outcomes.count("loss")
+    assert w["ties"] == outcomes.count("tie")
+    assert w["wins"] + w["losses"] + w["ties"] == len(outcomes)
+    assert w["p_value"] == sign_test(w["wins"], w["losses"])
+    # ties excluded: the p-value is invariant to how many ties occurred
+    assert w["p_value"] == sign_test(outcomes.count("win"),
+                                     outcomes.count("loss"))
